@@ -1,0 +1,27 @@
+"""Figure 4 analogue: fused ratio vs coarse tile size.
+
+Paper: ratio grows with tile size, improvement rate slows after ctSize=2048
+(their chosen heuristic).  The same saturation shape should appear here.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sparse.random import benchmark_suite
+from repro.core.tilefusion import build_schedule
+
+
+def run():
+    rows = []
+    suite = benchmark_suite(4096)
+    for ct in (64, 128, 256, 512, 1024, 2048, 4096):
+        ratios = []
+        for name, a in suite.items():
+            # p=1: measure the pure ratio-vs-tile-size curve (the paper's
+            # Fig 4), not the scheduler's load-balance-clamped t
+            sched = build_schedule(a, b_col=64, c_col=64, p=1,
+                                   cache_size=1e12, ct_size=ct)
+            ratios.append(sched.fused_ratio)
+        rows.append((f"fig4/fused_ratio/ct{ct}", 0.0,
+                     f"mean_fused_ratio={np.mean(ratios):.3f}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Figure 6/12 analogue: tile fusion vs prior fusion methods.
+
+Paper: tile fusion beats atomic tiling 13.6×, overlapped tiling 3.5×
+(GeMM-SpMM, graph matrices).  Also reports overlapped-tiling redundancy
+(replicated iterations), the paper's G2_circuit/inline_1 observation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse.random import powerlaw_graph, banded_spd
+from repro.core.tilefusion import build_schedule, to_device_schedule, fused_ops
+
+from .util import gmean, time_fn
+
+N = 2048
+P = 8
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(2)
+    mats = {"powerlaw_d8": powerlaw_graph(N, 8, seed=7),
+            "banded_b8": banded_spd(N, 8, seed=8)}
+    bcol = 64
+    sp_at, sp_ov = [], []
+    for name, a in mats.items():
+        b = jnp.asarray(rng.standard_normal((N, bcol)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
+        sched = build_schedule(a, b_col=bcol, c_col=bcol, p=P,
+                               cache_size=300_000.0, ct_size=512)
+        ds = to_device_schedule(a, sched)
+        t_f = time_fn(fused_ops.fused_gemm_spmm, ds, b, c)
+
+        parts = fused_ops.overlapped_tiles(a, P)
+        t_ov = time_fn(fused_ops.overlapped_gemm_spmm, a, parts, b, c)
+        waves = fused_ops.atomic_tiles(a, P)
+        t_at = time_fn(fused_ops.atomic_gemm_spmm, a, waves, b, c)
+        red = fused_ops.overlapped_redundancy(a, P)
+        sp_at.append(t_at / t_f)
+        sp_ov.append(t_ov / t_f)
+        rows.append((f"fig6/{name}/tile_fusion", t_f,
+                     f"vs_atomic={t_at/t_f:.2f};vs_overlapped={t_ov/t_f:.2f};"
+                     f"overlap_redundancy={red:.2f}"))
+    rows.append(("fig6/GMEAN", 0.0,
+                 f"vs_atomic={gmean(sp_at):.2f};vs_overlapped={gmean(sp_ov):.2f}"))
+    return rows

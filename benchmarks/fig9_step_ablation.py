@@ -1,0 +1,40 @@
+"""Figure 9 analogue: contribution of scheduler step 1 vs step 1+2.
+
+Step 1 = coarse fusion only (cache_size=∞ disables splitting);
+step 2 adds cost-model splitting.  Paper: step 1 gives the bulk (6.7× over
+sequential), step 2 helps 90% of matrices further.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse.random import benchmark_suite
+from repro.core.tilefusion import build_schedule, to_device_schedule, fused_ops
+
+from .util import gmean, time_fn
+
+N = 2048
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(3)
+    bcol = 64
+    sp2 = []
+    for name, a in benchmark_suite(N).items():
+        b = jnp.asarray(rng.standard_normal((N, bcol)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
+        s1 = build_schedule(a, b_col=bcol, c_col=bcol, p=8,
+                            cache_size=1e12, ct_size=512)   # step 1 only
+        s12 = build_schedule(a, b_col=bcol, c_col=bcol, p=8,
+                             cache_size=150_000.0, ct_size=512)
+        t1 = time_fn(fused_ops.fused_gemm_spmm, to_device_schedule(a, s1), b, c)
+        t12 = time_fn(fused_ops.fused_gemm_spmm, to_device_schedule(a, s12), b, c)
+        sp2.append(t1 / t12)
+        rows.append((f"fig9/{name}/step1", t1,
+                     f"step12_us={t12:.0f};step2_speedup={t1/t12:.2f};"
+                     f"tiles_s1={len(s1.wavefronts[0])};"
+                     f"tiles_s12={len(s12.wavefronts[0])}"))
+    rows.append(("fig9/GMEAN", 0.0, f"step2_speedup={gmean(sp2):.2f}"))
+    return rows

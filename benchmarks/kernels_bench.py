@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this CPU container interpret-mode timings are NOT TPU performance — the
+row exists to exercise the kernels end-to-end and record their block
+configurations; TPU perf is the §Roofline analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .util import time_fn
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(5)
+    # fused FFN
+    m, d, f = 512, 256, 1024
+    x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((d, f)) * 0.05, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((f, d)) * 0.05, jnp.float32)
+    t_k = time_fn(ops.fused_ffn, x, w1, w2, block_m=256, block_f=512)
+    t_r = time_fn(ref.ffn, x, w1, w2)
+    err = float(jnp.abs(ops.fused_ffn(x, w1, w2) - ref.ffn(x, w1, w2)).max())
+    rows.append(("kernels/fused_ffn/pallas_interp", t_k,
+                 f"ref_us={t_r:.0f};max_err={err:.2e}"))
+    # flash attention
+    b, h, s, dh = 1, 4, 512, 64
+    q = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
+    t_k = time_fn(ops.flash_attention, q, k, v, block_q=128, block_k=128)
+    t_r = time_fn(ref.attention, q, k, v)
+    err = float(jnp.abs(ops.flash_attention(q, k, v)
+                        - ref.attention(q, k, v)).max())
+    rows.append(("kernels/flash_attention/pallas_interp", t_k,
+                 f"ref_us={t_r:.0f};max_err={err:.2e}"))
+    # tile-fused GeMM-SpMM wavefront 0
+    T, t, j0, w, bcol, ccol = 8, 256, 32, 8, 64, 64
+    cols0 = jnp.asarray(rng.integers(0, t, (T, j0, w)), jnp.int32)
+    vals0 = jnp.asarray(rng.standard_normal((T, j0, w)), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((T * t, bcol)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((bcol, ccol)), jnp.float32)
+    t_k = time_fn(ops.tile_fused_gemm_spmm_wf0, cols0, vals0, bb, cc, t=t)
+    d1k, rk = ops.tile_fused_gemm_spmm_wf0(cols0, vals0, bb, cc, t=t)
+    d1r, rr = ref.tile_fused_gemm_spmm_wf0(cols0, vals0, bb, cc, t=t)
+    err = float(max(jnp.abs(d1k - d1r).max(), jnp.abs(rk - rr).max()))
+    rows.append(("kernels/tile_fused_gemm_spmm/pallas_interp", t_k,
+                 f"max_err={err:.2e};vmem_tile_t={ops.choose_kernel_tile(bcol, ccol, j0, w)}"))
+    # moe
+    e, cap = 8, 256
+    xm = jnp.asarray(rng.standard_normal((e, cap, d)), jnp.float32)
+    w1m = jnp.asarray(rng.standard_normal((e, d, f)) * 0.05, jnp.float32)
+    w2m = jnp.asarray(rng.standard_normal((e, f, d)) * 0.05, jnp.float32)
+    t_k = time_fn(ops.fused_moe_ffn, xm, w1m, w2m, block_c=128, block_f=512)
+    err = float(jnp.abs(ops.fused_moe_ffn(xm, w1m, w2m)
+                        - ref.moe_ffn(xm, w1m, w2m)).max())
+    rows.append(("kernels/fused_moe_ffn/pallas_interp", t_k,
+                 f"max_err={err:.2e}"))
+    return rows

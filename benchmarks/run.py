@@ -1,0 +1,35 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+MODULES = [
+    "fig1_fused_ratio_census",
+    "fig4_ratio_vs_tilesize",
+    "table2_gemm_spmm",
+    "table3_spmm_spmm",
+    "fig6_fused_baselines",
+    "fig9_step_ablation",
+    "fig10_amortization",
+    "reorder_ablation",
+    "kernels_bench",
+]
+
+
+def main() -> None:
+    import importlib
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    for mod_name in MODULES:
+        if only and mod_name not in only:
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        for name, us, derived in mod.run():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        print(f"# {mod_name} done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Benchmark helpers: timing + the shared matrix suite."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, reps: int = 7, warmup: int = 2, **kw):
+    """Median wall time in microseconds (paper uses median of 7 runs)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def gmean(xs):
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.log(np.maximum(xs, 1e-12)).mean()))

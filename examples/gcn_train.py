@@ -1,0 +1,63 @@
+"""End-to-end GCN training — the paper's native application at full size.
+
+  PYTHONPATH=src python examples/gcn_train.py [--nodes 4096] [--steps 100]
+
+GCN layer = D = Â(XW) = GeMM-SpMM; every layer and every step runs through
+the tile-fusion schedule (built once per graph).  Reports fused vs unfused
+wall time and the schedule's traffic model.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.gcn import GCNConfig
+from repro.core.sparse.random import powerlaw_graph
+from repro.models.gcn import GCN
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=4096)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=0.3)
+    args = ap.parse_args()
+
+    cfg = GCNConfig(n_nodes=args.nodes, in_dim=args.hidden,
+                    hidden_dim=args.hidden, out_dim=32, n_layers=2)
+    adj = powerlaw_graph(cfg.n_nodes, cfg.avg_degree, seed=0)
+    t0 = time.time()
+    model = GCN(cfg, adj, cache_size=300_000.0)
+    print(f"schedule build: {time.time()-t0:.2f}s, "
+          f"fused_ratio={model.sched.fused_ratio:.2f}, "
+          f"tiles={len(model.sched.wavefronts[0])}+"
+          f"{len(model.sched.wavefronts[1])}")
+    tm = model.dsched.hbm_traffic_model(cfg.hidden_dim, cfg.hidden_dim)
+    print(f"traffic saving (kernel path): {100*tm['traffic_saving']:.0f}%")
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((cfg.n_nodes, cfg.in_dim)),
+                    jnp.float32)
+    y = jnp.asarray(rng.integers(0, cfg.out_dim, cfg.n_nodes))
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    for fused in (True, False):
+        p = params
+        lg = jax.jit(jax.value_and_grad(
+            lambda p_: model.loss(p_, x, y, fused=fused)))
+        lg(p)  # compile
+        t0 = time.time()
+        for step in range(args.steps):
+            loss, grads = lg(p)
+            p = jax.tree.map(lambda a_, g: a_ - args.lr * g, p, grads)
+        dt = time.time() - t0
+        print(f"{'fused' if fused else 'unfused'}: {args.steps} steps "
+              f"in {dt:.2f}s ({dt/args.steps*1e3:.1f} ms/step), "
+              f"final loss {float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

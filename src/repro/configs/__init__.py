@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+from .base import SHAPES, ModelConfig, ShapeConfig
+from . import (gcn, granite_moe_3b, hymba_1_5b, llama4_scout, minicpm3_4b,
+               minitron_8b, qwen2_5_3b, qwen2_vl_72b, stablelm_1_6b,
+               whisper_medium, xlstm_1_3b)
+
+_MODULES = {
+    "whisper-medium": whisper_medium,
+    "stablelm-1.6b": stablelm_1_6b,
+    "minicpm3-4b": minicpm3_4b,
+    "minitron-8b": minitron_8b,
+    "qwen2.5-3b": qwen2_5_3b,
+    "granite-moe-3b-a800m": granite_moe_3b,
+    "llama4-scout-17b-a16e": llama4_scout,
+    "xlstm-1.3b": xlstm_1_3b,
+    "qwen2-vl-72b": qwen2_vl_72b,
+    "hymba-1.5b": hymba_1_5b,
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    mod = _MODULES[name]
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells():
+    """All (arch, shape) dry-run cells, with applicability filtering."""
+    out = []
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            if shape_name in cfg.skip_shapes:
+                continue
+            out.append((arch, shape_name))
+    return out
+
+
+__all__ = ["ARCH_NAMES", "SHAPES", "get_config", "get_shape", "cells",
+           "ModelConfig", "ShapeConfig", "gcn"]

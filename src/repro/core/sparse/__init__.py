@@ -1,0 +1,4 @@
+from .formats import CSR, TileELL, block_csr_pattern
+from . import random
+
+__all__ = ["CSR", "TileELL", "block_csr_pattern", "random"]

@@ -1,0 +1,123 @@
+"""Sparse matrix containers used across the framework.
+
+CSR is the scheduler-side format (numpy, host).  The kernel-side formats are
+static-shape paddded layouts (tile-local ELL / BCSR) that XLA and Pallas can
+consume; conversion happens once per sparsity pattern, amortized exactly like
+the paper's scheduler (§4.2.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Host-side CSR matrix (numpy)."""
+
+    n_rows: int
+    n_cols: int
+    indptr: np.ndarray   # int32 (n_rows+1,)
+    indices: np.ndarray  # int32 (nnz,)
+    data: np.ndarray     # float (nnz,)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def row(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = int(self.indptr[i]), int(self.indptr[i + 1])
+        return self.indices[lo:hi], self.data[lo:hi]
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros((self.n_rows, self.n_cols), dtype=self.data.dtype)
+        for i in range(self.n_rows):
+            cols, vals = self.row(i)
+            out[i, cols] += vals
+        return out
+
+    @staticmethod
+    def from_dense(a: np.ndarray) -> "CSR":
+        n_rows, n_cols = a.shape
+        indptr = [0]
+        indices = []
+        data = []
+        for i in range(n_rows):
+            (cols,) = np.nonzero(a[i])
+            indices.append(cols.astype(np.int32))
+            data.append(a[i, cols])
+            indptr.append(indptr[-1] + cols.shape[0])
+        return CSR(
+            n_rows=n_rows,
+            n_cols=n_cols,
+            indptr=np.asarray(indptr, dtype=np.int32),
+            indices=np.concatenate(indices) if indices else np.zeros(0, np.int32),
+            data=np.concatenate(data) if data else np.zeros(0, np.float64),
+        )
+
+    @staticmethod
+    def from_coo(n_rows: int, n_cols: int, rows: np.ndarray, cols: np.ndarray,
+                 vals: np.ndarray) -> "CSR":
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        # merge duplicates
+        key = rows.astype(np.int64) * n_cols + cols
+        uniq, inv = np.unique(key, return_inverse=True)
+        merged = np.zeros(uniq.shape[0], dtype=vals.dtype)
+        np.add.at(merged, inv, vals)
+        urows = (uniq // n_cols).astype(np.int32)
+        ucols = (uniq % n_cols).astype(np.int32)
+        indptr = np.zeros(n_rows + 1, dtype=np.int32)
+        np.add.at(indptr, urows + 1, 1)
+        indptr = np.cumsum(indptr).astype(np.int32)
+        return CSR(n_rows, n_cols, indptr, ucols, merged)
+
+
+def block_csr_pattern(a: CSR, block: int) -> CSR:
+    """Collapse a CSR matrix to its block-level sparsity pattern.
+
+    Returns a CSR over (ceil(n/block) x ceil(m/block)) block grid where
+    data[k] = number of scalar nonzeros inside block k.  This is the DAG the
+    TPU-side scheduler runs on (DESIGN.md §2: block granularity).
+    """
+    nb_rows = -(-a.n_rows // block)
+    nb_cols = -(-a.n_cols // block)
+    rows = np.repeat(np.arange(a.n_rows, dtype=np.int64), np.diff(a.indptr))
+    brows = (rows // block).astype(np.int64)
+    bcols = (a.indices.astype(np.int64) // block)
+    key = brows * nb_cols + bcols
+    uniq, counts = np.unique(key, return_counts=True)
+    urows = (uniq // nb_cols).astype(np.int32)
+    ucols = (uniq % nb_cols).astype(np.int32)
+    indptr = np.zeros(nb_rows + 1, dtype=np.int32)
+    np.add.at(indptr, urows + 1, 1)
+    indptr = np.cumsum(indptr).astype(np.int32)
+    return CSR(nb_rows, nb_cols, indptr, ucols, counts.astype(np.float64))
+
+
+@dataclasses.dataclass(frozen=True)
+class TileELL:
+    """Padded ELL layout for a set of CSR rows, static-shape for XLA.
+
+    Each of n_rows has up to `width` (col, val) slots; padding uses col=0,
+    val=0 so padded slots contribute nothing.
+    """
+
+    cols: np.ndarray  # int32 (n_rows, width)
+    vals: np.ndarray  # float (n_rows, width)
+
+    @staticmethod
+    def from_csr_rows(a: CSR, rows: np.ndarray, width: int | None = None) -> "TileELL":
+        counts = (a.indptr[rows + 1] - a.indptr[rows]).astype(np.int64)
+        w = int(counts.max()) if width is None and rows.size else (width or 1)
+        w = max(w, 1)
+        cols = np.zeros((rows.shape[0], w), dtype=np.int32)
+        vals = np.zeros((rows.shape[0], w), dtype=np.float64)
+        for k, r in enumerate(rows):
+            c, v = a.row(int(r))
+            c, v = c[:w], v[:w]
+            cols[k, : c.shape[0]] = c
+            vals[k, : v.shape[0]] = v
+        return TileELL(cols=cols, vals=vals)

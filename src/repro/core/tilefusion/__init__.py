@@ -1,0 +1,13 @@
+"""Tile fusion — the paper's contribution as a composable JAX module."""
+from .cost_model import (DEFAULT_CPU_CACHE_BYTES, DEFAULT_VMEM_BUDGET_BYTES,
+                         tile_cost_bytes, tile_cost_elements)
+from .scheduler import Schedule, Tile, build_schedule, fused_compute_ratio
+from .schedule import DeviceSchedule, to_device_schedule
+from . import fused_ops, fused_ref
+
+__all__ = [
+    "Schedule", "Tile", "build_schedule", "fused_compute_ratio",
+    "DeviceSchedule", "to_device_schedule", "fused_ops", "fused_ref",
+    "tile_cost_bytes", "tile_cost_elements",
+    "DEFAULT_CPU_CACHE_BYTES", "DEFAULT_VMEM_BUDGET_BYTES",
+]

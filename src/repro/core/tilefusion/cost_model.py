@@ -1,0 +1,66 @@
+"""Data-movement cost model — Equation 3 of the paper, dtype-aware.
+
+cost(T, bCol, cCol) = (nz(T) + uc(T) + t + |J|) * cCol + idx
+
+  nz(T) : unique nonzeros in the tile from A (and B when sparse; when B is
+          dense the tile's full B rows, t*bCol, are charged instead)
+  uc(T) : nonzeros with unique columns in the tile (distinct D1/C rows touched
+          by the tile's second-op iterations)
+  t     : rows of D1 produced by the tile (first-op iterations)
+  |J|   : fused second-op iterations (rows of D written)
+  idx   : indexing cost for the sparse operand(s) (int32 per nonzero)
+
+On TPU `cacheSize` is the per-core VMEM budget (DESIGN.md §2); the unit here
+is *elements* scaled by dtype bytes so the same model serves f32/bf16/f64.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..sparse.formats import CSR
+
+#: Default fast-memory budget: 64 MiB of the ~128 MiB v5e VMEM (leave half for
+#: double-buffering and the matmul operands), expressed in bytes.
+DEFAULT_VMEM_BUDGET_BYTES = 64 * 1024 * 1024
+
+#: CPU-style default used by benchmarks mirroring the paper's setting
+#: (L1+L2+L3/core on CascadeLake ~ 2.4 MB).
+DEFAULT_CPU_CACHE_BYTES = int(2.4 * 1024 * 1024)
+
+
+def tile_cost_elements(
+    a: CSR,
+    i_start: int,
+    i_end: int,
+    j_rows: np.ndarray,
+    b_col: int,
+    c_col: int,
+    b_is_sparse: bool,
+) -> float:
+    """Eq 3 in elements (multiply by dtype bytes for a byte budget)."""
+    t = max(i_end - i_start, 0)
+    if j_rows.size:
+        starts = a.indptr[j_rows]
+        ends = a.indptr[j_rows + 1]
+        nnz_a = int((ends - starts).sum())
+        cols = np.concatenate([a.indices[s:e] for s, e in zip(starts, ends)]) \
+            if nnz_a else np.zeros(0, np.int32)
+        uc = int(np.unique(cols).shape[0])
+    else:
+        nnz_a, uc = 0, 0
+    if b_is_sparse:
+        # nonzeros of the B rows in [i_start, i_end) — approximated by the
+        # same CSR when B == A (SpMM-SpMM case), else caller passes its own.
+        nz_b = int(a.indptr[min(i_end, a.n_rows)] - a.indptr[min(i_start, a.n_rows)])
+        nz = nnz_a + nz_b
+        idx = nnz_a + nz_b  # int32 per nonzero
+    else:
+        nz = nnz_a + t * b_col  # dense B rows charged in full
+        idx = nnz_a
+    return float((nz + uc + t + j_rows.size) * c_col + idx)
+
+
+def tile_cost_bytes(a, i_start, i_end, j_rows, b_col, c_col, b_is_sparse,
+                    dtype_bytes: int = 4) -> float:
+    return tile_cost_elements(a, i_start, i_end, j_rows, b_col, c_col,
+                              b_is_sparse) * dtype_bytes

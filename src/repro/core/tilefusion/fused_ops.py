@@ -1,0 +1,268 @@
+"""JAX executors for the fused schedule + the paper's baselines.
+
+``fused_gemm_spmm`` / ``fused_spmm_spmm`` are the jit-compilable fused codes
+(Listing 1 / Listing 3 of the paper, vmapped over tiles instead of OpenMP).
+``unfused_*`` are the two-call baselines.  ``overlapped_*`` (CA-style
+replication) and ``atomic_*`` (sparse-tiling-style multi-wavefront) are the
+prior-work baselines of Figure 6/12, adapted as in paper §4.1.3.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sparse.formats import CSR, TileELL
+from .schedule import DeviceSchedule
+
+
+def _ell_rows(cols, vals, table):
+    """rows[j] = Σ_w vals[j, w] · table[cols[j, w]] — scanned over w so the
+    gather never materializes the (…, w, c_col) tensor (VMEM/cache friendly,
+    mirrors the kernel's one-hot accumulation loop)."""
+    w = cols.shape[-1]
+
+    def body(acc, wv):
+        cw, vw = wv                                     # (..., ) per slot
+        return acc + vw[..., None] * table[cw], None
+
+    init = jnp.zeros(cols.shape[:-1] + (table.shape[-1],), table.dtype)
+    acc, _ = jax.lax.scan(body, init,
+                          (jnp.moveaxis(cols, -1, 0), jnp.moveaxis(vals, -1, 0)))
+    return acc
+
+
+# --------------------------------------------------------------------------
+# Fused executors (tile fusion)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("t_pad", "n_i", "n_j"))
+def _fused_gemm_spmm_impl(b_pad, c, i_starts, j_rows0, cols0, vals0,
+                          j_rows1, cols1, vals1, *, t_pad, n_i, n_j):
+    c_col = c.shape[1]
+
+    # ---- wavefront 0: one vmapped step per fused tile ----
+    def tile_fn(i_start, j_rows, cols, vals):
+        b_t = jax.lax.dynamic_slice(b_pad, (i_start, 0), (t_pad, b_pad.shape[1]))
+        d1_t = b_t @ c                                   # GeMM rows of the tile
+        rows = _ell_rows(cols, vals, d1_t)               # fused SpMM rows
+        return d1_t, rows
+
+    d1_tiles, rows0 = jax.vmap(tile_fn)(i_starts, j_rows0, cols0, vals0)
+
+    # stitch D1 (disjoint contiguous ranges; padded rows dropped)
+    row_idx = (i_starts[:, None] + jnp.arange(t_pad)[None, :]).reshape(-1)
+    row_idx = jnp.where(row_idx < n_i, row_idx, n_i)     # pad rows -> drop
+    d1 = jnp.zeros((n_i, c_col), c.dtype).at[row_idx].set(
+        d1_tiles.reshape(-1, c_col), mode="drop")
+    d = jnp.zeros((n_j, c_col), c.dtype).at[j_rows0.reshape(-1)].set(
+        rows0.reshape(-1, c_col), mode="drop")
+
+    # ---- barrier; wavefront 1: global gather over D1 ----
+    if j_rows1.shape[0]:
+        rows1 = _ell_rows(cols1, vals1, d1)              # (T1, j1_max, c_col)
+        d = d.at[j_rows1.reshape(-1)].set(
+            rows1.reshape(-1, c_col), mode="drop")
+    return d
+
+
+@functools.partial(jax.jit, static_argnames=("t", "n_i", "n_j"))
+def _fused_gemm_spmm_uniform(b_pad, c, j_rows0, cols0, vals0,
+                             j_rows1, cols1, vals1, *, t, n_i, n_j):
+    """Uniform-tile fast path: one batched matmul, no dynamic slices, no
+    padding waste — the executor twin of the Pallas kernel's grid."""
+    c_col = c.shape[1]
+    n_t = b_pad.shape[0] // t
+    d1_tiles = jnp.einsum("tkb,bc->tkc", b_pad.reshape(n_t, t, -1), c)
+    rows0 = jax.vmap(_ell_rows)(cols0, vals0, d1_tiles)
+    d1 = d1_tiles.reshape(n_t * t, c_col)
+    d = jnp.zeros((n_j, c_col), c.dtype).at[j_rows0.reshape(-1)].set(
+        rows0.reshape(-1, c_col), mode="drop")
+    if j_rows1.shape[0]:
+        rows1 = _ell_rows(cols1, vals1, d1[:n_i])
+        d = d.at[j_rows1.reshape(-1)].set(rows1.reshape(-1, c_col),
+                                          mode="drop")
+    return d
+
+
+def _is_uniform(dsched: DeviceSchedule) -> bool:
+    t = dsched.t_pad
+    st = np.asarray(dsched.i_starts)
+    ln = np.asarray(dsched.i_lens)
+    return bool((st == np.arange(st.shape[0]) * t).all()
+                and (ln[:-1] == t).all() if st.size else True)
+
+
+def fused_gemm_spmm(dsched: DeviceSchedule, b: jax.Array, c: jax.Array) -> jax.Array:
+    if _is_uniform(dsched):
+        t = dsched.t_pad
+        n_t = dsched.n_tiles0
+        b_pad = jnp.pad(b, ((0, n_t * t - b.shape[0]), (0, 0)))
+        return _fused_gemm_spmm_uniform(
+            b_pad, c, jnp.asarray(dsched.j_rows0),
+            jnp.asarray(dsched.ell_cols0),
+            jnp.asarray(dsched.ell_vals0, c.dtype),
+            jnp.asarray(dsched.j_rows1), jnp.asarray(dsched.ell_cols1),
+            jnp.asarray(dsched.ell_vals1, c.dtype),
+            t=t, n_i=dsched.n_i, n_j=dsched.n_j)
+    b_pad = jnp.pad(b, ((0, dsched.t_pad), (0, 0)))
+    return _fused_gemm_spmm_impl(
+        b_pad, c,
+        jnp.asarray(dsched.i_starts), jnp.asarray(dsched.j_rows0),
+        jnp.asarray(dsched.ell_cols0), jnp.asarray(dsched.ell_vals0, c.dtype),
+        jnp.asarray(dsched.j_rows1), jnp.asarray(dsched.ell_cols1),
+        jnp.asarray(dsched.ell_vals1, c.dtype),
+        t_pad=dsched.t_pad, n_i=dsched.n_i, n_j=dsched.n_j)
+
+
+@functools.partial(jax.jit, static_argnames=("t_pad", "n_i", "n_j"))
+def _fused_spmm_spmm_impl(c, i_starts, op1_cols, op1_vals,
+                          j_rows0, cols0, vals0, j_rows1, cols1, vals1,
+                          *, t_pad, n_i, n_j):
+    c_col = c.shape[1]
+
+    def tile_fn(i_start, o_cols, o_vals, j_rows, cols, vals):
+        # op1 SpMM rows of the tile (ELL over global C)
+        d1_t = _ell_rows(o_cols, o_vals, c)
+        rows = _ell_rows(cols, vals, d1_t)               # in-tile gather
+        return d1_t, rows
+
+    d1_tiles, rows0 = jax.vmap(tile_fn)(
+        i_starts, op1_cols, op1_vals, j_rows0, cols0, vals0)
+
+    row_idx = (i_starts[:, None] + jnp.arange(t_pad)[None, :]).reshape(-1)
+    row_idx = jnp.where(row_idx < n_i, row_idx, n_i)
+    d1 = jnp.zeros((n_i, c_col), c.dtype).at[row_idx].set(
+        d1_tiles.reshape(-1, c_col), mode="drop")
+    d = jnp.zeros((n_j, c_col), c.dtype).at[j_rows0.reshape(-1)].set(
+        rows0.reshape(-1, c_col), mode="drop")
+
+    if j_rows1.shape[0]:
+        rows1 = _ell_rows(cols1, vals1, d1)
+        d = d.at[j_rows1.reshape(-1)].set(rows1.reshape(-1, c_col), mode="drop")
+    return d
+
+
+def _op1_ell(a1: CSR, dsched: DeviceSchedule):
+    """Per-tile padded ELL of the op-1 rows (global columns into C)."""
+    t_pad = dsched.t_pad
+    n_t = dsched.n_tiles0
+    counts = np.diff(a1.indptr)
+    w = int(counts.max()) if counts.size else 1
+    cols = np.zeros((n_t, t_pad, max(w, 1)), np.int32)
+    vals = np.zeros((n_t, t_pad, max(w, 1)), np.float32)
+    for v in range(n_t):
+        i0, ln = int(dsched.i_starts[v]), int(dsched.i_lens[v])
+        for k in range(ln):
+            cc, vv = a1.row(i0 + k)
+            cols[v, k, : cc.shape[0]] = cc
+            vals[v, k, : cc.shape[0]] = vv
+    return cols, vals
+
+
+def fused_spmm_spmm(dsched: DeviceSchedule, a1: CSR, c: jax.Array) -> jax.Array:
+    cols, vals = _op1_ell(a1, dsched)
+    return _fused_spmm_spmm_impl(
+        c, jnp.asarray(dsched.i_starts), jnp.asarray(cols),
+        jnp.asarray(vals, c.dtype),
+        jnp.asarray(dsched.j_rows0), jnp.asarray(dsched.ell_cols0),
+        jnp.asarray(dsched.ell_vals0, c.dtype),
+        jnp.asarray(dsched.j_rows1), jnp.asarray(dsched.ell_cols1),
+        jnp.asarray(dsched.ell_vals1, c.dtype),
+        t_pad=dsched.t_pad, n_i=dsched.n_i, n_j=dsched.n_j)
+
+
+# --------------------------------------------------------------------------
+# Unfused baselines (two separate routines, D1 round-trips memory)
+# --------------------------------------------------------------------------
+def csr_to_ell(a: CSR):
+    ell = TileELL.from_csr_rows(a, np.arange(a.n_rows))
+    return jnp.asarray(ell.cols), jnp.asarray(ell.vals, jnp.float32)
+
+
+@jax.jit
+def spmm_ell(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
+    """Row-ELL SpMM: D[i] = sum_w vals[i,w] * X[cols[i,w]]."""
+    return _ell_rows(cols, vals.astype(x.dtype), x)
+
+
+@jax.jit
+def unfused_gemm_spmm(cols, vals, b, c):
+    d1 = b @ c
+    return spmm_ell(cols, vals, d1)
+
+
+@jax.jit
+def unfused_spmm_spmm(cols_a, vals_a, cols_a1, vals_a1, c):
+    d1 = spmm_ell(cols_a1, vals_a1, c)
+    return spmm_ell(cols_a, vals_a, d1)
+
+
+# --------------------------------------------------------------------------
+# Prior-work baselines (paper §4.1.3 adaptations)
+# --------------------------------------------------------------------------
+def overlapped_tiles(a: CSR, p: int):
+    """CA-style overlapped tiling: equal partitions of J; every partition
+    *replicates* all D1 rows its J rows depend on (no synchronization,
+    redundant compute).  Returns per-partition (dep_rows, j_rows)."""
+    parts = np.array_split(np.arange(a.n_rows, dtype=np.int32), p)
+    out = []
+    for jr in parts:
+        if jr.size == 0:
+            continue
+        deps = np.unique(np.concatenate(
+            [a.indices[a.indptr[j]:a.indptr[j + 1]] for j in jr]
+        )) if jr.size else np.zeros(0, np.int32)
+        out.append((deps.astype(np.int32), jr))
+    return out
+
+
+def overlapped_gemm_spmm(a: CSR, parts, b: jax.Array, c: jax.Array) -> jax.Array:
+    """Executes the overlapped schedule; counts replicated GeMV work."""
+    n_j, c_col = a.n_rows, c.shape[1]
+    d = jnp.zeros((n_j, c_col), c.dtype)
+    for deps, jr in parts:
+        ell = TileELL.from_csr_rows(a, jr)
+        # remap global dep columns -> local replicated rows
+        remap = np.zeros(a.n_cols, np.int32)
+        remap[deps] = np.arange(deps.shape[0], dtype=np.int32)
+        loc = remap[ell.cols]
+        d1_rep = b[jnp.asarray(deps)] @ c              # replicated compute
+        rows = jnp.einsum("jw,jwc->jc",
+                          jnp.asarray(ell.vals, c.dtype), d1_rep[jnp.asarray(loc)])
+        d = d.at[jnp.asarray(jr)].set(rows)
+    return d
+
+
+def overlapped_redundancy(a: CSR, p: int) -> float:
+    """Replicated op-1 iterations / |I| (paper's G2_circuit/inline_1 metric)."""
+    parts = overlapped_tiles(a, p)
+    total = sum(int(d.shape[0]) for d, _ in parts)
+    return total / max(a.n_cols, 1)
+
+
+def atomic_tiles(a: CSR, p: int, n_waves: int = 4):
+    """Sparse-tiling-style schedule: J rows partitioned into p*n_waves tiles;
+    each wave is a synchronization barrier (multi-wavefront, vs tile fusion's
+    single barrier).  Models the synchronization overhead, not CPU atomics."""
+    parts = np.array_split(np.arange(a.n_rows, dtype=np.int32), p * n_waves)
+    waves = [parts[w::n_waves] for w in range(n_waves)]
+    return waves
+
+
+def atomic_gemm_spmm(a: CSR, waves, b: jax.Array, c: jax.Array) -> jax.Array:
+    n_j, c_col = a.n_rows, c.shape[1]
+    d1 = b @ c
+    d1.block_until_ready()                     # producer barrier
+    d = jnp.zeros((n_j, c_col), c.dtype)
+    for wave in waves:
+        for jr in wave:
+            if jr.size == 0:
+                continue
+            ell = TileELL.from_csr_rows(a, jr)
+            rows = jnp.einsum("jw,jwc->jc", jnp.asarray(ell.vals, c.dtype),
+                              d1[jnp.asarray(ell.cols)])
+            d = d.at[jnp.asarray(jr)].set(rows)
+        d.block_until_ready()                  # per-wave barrier
+    return d

@@ -1,0 +1,85 @@
+"""Schedule-walking numpy oracle.
+
+Executes the fused schedule tile by tile *in schedule order* and asserts the
+central correctness invariant: every D1 row read by a fused second-op
+iteration was produced earlier in the SAME tile (wavefront 0) or in any
+wavefront-0 tile (wavefront 1, after the barrier).  This is the executable
+statement of the paper's "no synchronization inside a wavefront" guarantee.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..sparse.formats import CSR
+from .scheduler import Schedule
+
+
+def run_gemm_spmm(a: CSR, b: np.ndarray, c: np.ndarray, sched: Schedule,
+                  check: bool = True) -> np.ndarray:
+    """D = A @ (B @ C) executed per the fused schedule."""
+    n_i, n_j = sched.n_i, sched.n_j
+    c_col = c.shape[1]
+    d1 = np.zeros((n_i, c_col), dtype=np.float64)
+    d1_ready = np.zeros(n_i, dtype=bool)
+    d = np.zeros((n_j, c_col), dtype=np.float64)
+
+    # ---- wavefront 0 ----
+    for tl in sched.wavefronts[0]:
+        local_ready = np.zeros(n_i, dtype=bool)
+        d1[tl.i_start:tl.i_end] = b[tl.i_start:tl.i_end] @ c
+        local_ready[tl.i_start:tl.i_end] = True
+        for j in tl.j_rows:
+            cols, vals = a.row(int(j))
+            if check:
+                assert local_ready[cols].all(), (
+                    f"tile [{tl.i_start},{tl.i_end}) fused row {j} reads D1 "
+                    f"rows outside the tile — scheduler bug")
+            d[j] = vals @ d1[cols]
+        d1_ready[tl.i_start:tl.i_end] = True
+    if check:
+        assert d1_ready.all(), "wavefront 0 did not produce all of D1"
+
+    # ---- barrier; wavefront 1 ----
+    for tl in sched.wavefronts[1]:
+        for j in tl.j_rows:
+            cols, vals = a.row(int(j))
+            d[j] = vals @ d1[cols]
+    return d
+
+
+def run_spmm_spmm(a: CSR, a1: CSR, c: np.ndarray, sched: Schedule,
+                  check: bool = True) -> np.ndarray:
+    """D = A @ (A1 @ C) executed per the fused schedule (both ops SpMM)."""
+    n_i, n_j = sched.n_i, sched.n_j
+    c_col = c.shape[1]
+    d1 = np.zeros((n_i, c_col), dtype=np.float64)
+    d = np.zeros((n_j, c_col), dtype=np.float64)
+    d1_ready = np.zeros(n_i, dtype=bool)
+
+    for tl in sched.wavefronts[0]:
+        for i in range(tl.i_start, tl.i_end):
+            cols, vals = a1.row(i)
+            d1[i] = vals @ c[cols]
+        for j in tl.j_rows:
+            cols, vals = a.row(int(j))
+            if check:
+                assert ((cols >= tl.i_start) & (cols < tl.i_end)).all(), (
+                    f"fused row {j} escapes tile [{tl.i_start},{tl.i_end})")
+            d[j] = vals @ d1[cols]
+        d1_ready[tl.i_start:tl.i_end] = True
+    if check:
+        assert d1_ready.all()
+
+    for tl in sched.wavefronts[1]:
+        for j in tl.j_rows:
+            cols, vals = a.row(int(j))
+            d[j] = vals @ d1[cols]
+    return d
+
+
+def unfused_gemm_spmm(a: CSR, b: np.ndarray, c: np.ndarray) -> np.ndarray:
+    return a.to_dense() @ (b @ c)
+
+
+def unfused_spmm_spmm(a: CSR, a1: CSR, c: np.ndarray) -> np.ndarray:
+    return a.to_dense() @ (a1.to_dense() @ c)

@@ -1,0 +1,66 @@
+"""Bandwidth-reducing row reordering — beyond-paper optimization.
+
+The tile-fusion criterion (a second-op row fuses iff ALL its dependencies
+fall inside one contiguous tile) makes the fused ratio a direct function of
+the matrix bandwidth.  The paper takes the matrix ordering as given; a
+reverse Cuthill-McKee (RCM) pass before scheduling concentrates each row's
+neighbourhood into a contiguous range, raising the fused ratio on graph
+matrices (the paper's weak case) at a one-off O(nnz log n) cost amortized
+exactly like the scheduler itself.
+
+Correctness: D = A(BC) with symmetric permutation P is
+P·D = (P·A·Pᵀ)((P·B)·C) — the caller permutes A's rows/cols and B's rows,
+and un-permutes D (`apply`/`undo` helpers).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..sparse.formats import CSR
+
+
+def rcm_order(a: CSR) -> np.ndarray:
+    """Reverse Cuthill-McKee permutation (perm[new] = old)."""
+    n = a.n_rows
+    deg = np.diff(a.indptr)
+    visited = np.zeros(n, dtype=bool)
+    order = np.empty(n, dtype=np.int64)
+    pos = 0
+    # process components in order of minimum degree seed
+    seeds = np.argsort(deg, kind="stable")
+    for seed in seeds:
+        if visited[seed]:
+            continue
+        # BFS with degree-sorted neighbour expansion
+        queue = [int(seed)]
+        visited[seed] = True
+        while queue:
+            u = queue.pop(0)
+            order[pos] = u
+            pos += 1
+            nbrs = a.indices[a.indptr[u]:a.indptr[u + 1]]
+            nbrs = nbrs[~visited[nbrs]]
+            if nbrs.size:
+                visited[nbrs] = True
+                nbrs = nbrs[np.argsort(deg[nbrs], kind="stable")]
+                queue.extend(int(x) for x in nbrs)
+    assert pos == n
+    return order[::-1].copy()          # the "reverse" in RCM
+
+
+def permute_csr(a: CSR, perm: np.ndarray) -> CSR:
+    """Symmetric permutation: A' = P A Pᵀ with perm[new] = old."""
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0])
+    rows = np.repeat(np.arange(a.n_rows), np.diff(a.indptr))
+    new_rows = inv[rows]
+    new_cols = inv[a.indices]
+    return CSR.from_coo(a.n_rows, a.n_cols, new_rows.astype(np.int64),
+                        new_cols.astype(np.int64), a.data.copy())
+
+
+def bandwidth(a: CSR) -> int:
+    rows = np.repeat(np.arange(a.n_rows), np.diff(a.indptr))
+    if rows.size == 0:
+        return 0
+    return int(np.abs(rows - a.indices).max())

@@ -1,0 +1,11 @@
+"""TPU Pallas kernels for the framework's compute hot-spots.
+
+tile_fused_gemm_spmm — the paper's fused code (wavefront 0) on TPU
+spmm                 — ELL SpMM (unfused baseline + wavefront 1)
+fused_ffn            — dense limiting case of tile fusion
+flash_attention      — the attention instance of the fused two-matmul chain
+moe                  — expert-FFN tile fusion (sparse dispatch)
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,106 @@
+"""Flash-attention Pallas kernel (online softmax, tiled to VMEM).
+
+Attention is the transformer's instance of the paper's pattern: a two-matmul
+chain ``O = P @ V`` with ``P = softmax(Q K^T)`` the (block-)sparse-after-
+masking intermediate.  Tile fusion's insight — keep the intermediate tile in
+fast memory and consume it immediately — is exactly the flash recurrence.
+With a sliding window the score matrix is block-sparse and the fused tiles
+over (q-block, kv-block) pairs mirror the paper's wavefront-0 tiles (all
+dependencies inside the tile, no synchronization between q blocks).
+
+Grid: (batch, heads, q_blocks, kv_blocks), kv innermost/sequential; running
+max/denominator/accumulator live in VMEM scratch across kv steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_q: int, block_k: int, sm_scale: float,
+            causal: bool, window: int, n_k_blocks: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                       # (bq, d)
+    k = k_ref[0, 0]                                       # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (bq, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0, 0], preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _finish():
+        denom = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_k", "causal", "window", "sm_scale", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, block_q: int = 128, block_k: int = 128,
+                    causal: bool = True, window: int = 0,
+                    sm_scale: float | None = None,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, D); k, v: (B, H, Sk, D) -> (B, H, Sq, D).
+
+    ``window > 0`` = sliding-window (block-sparse) attention; kv blocks fully
+    outside the window are masked (a production TPU kernel would skip them —
+    the FLOP saving is accounted in the roofline as block-sparsity).
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    nq, nk = sq // block_q, sk // block_k
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, sm_scale=float(sm_scale),
+        causal=causal, window=window, n_k_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i, j: (b_, h_, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, i, j: (b_, h_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,61 @@
+"""Fused transformer FFN kernel: out = act(X @ W1) @ W2, intermediate in VMEM.
+
+The dense limiting case of tile fusion (DESIGN.md §4): when ``A`` is dense,
+every second-op row fuses and the schedule degenerates to classic producer/
+consumer fusion — the intermediate ``H = act(X W1)`` never round-trips HBM.
+
+Grid: (m_blocks, f_blocks).  The f axis is the contraction of the second
+matmul; the output block (indexed by m only) is revisited and accumulated
+across f steps — this is the VMEM-budgeted split of the intermediate, i.e.
+the paper's step-2 splitting applied to the dense case.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w1_ref, w2_ref, out_ref, *, act: str):
+    f = pl.program_id(1)
+    h = jnp.dot(x_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+    if act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "silu":
+        h = jax.nn.silu(h)
+    part = jnp.dot(h.astype(x_ref.dtype), w2_ref[...],
+                   preferred_element_type=jnp.float32)
+
+    @pl.when(f == 0)
+    def _init():
+        out_ref[...] = part.astype(out_ref.dtype)
+
+    @pl.when(f != 0)
+    def _acc():
+        out_ref[...] = (out_ref[...] + part).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_f", "act", "interpret"))
+def fused_ffn(x: jax.Array, w1: jax.Array, w2: jax.Array,
+              *, block_m: int = 256, block_f: int = 512,
+              act: str = "gelu", interpret: bool = True) -> jax.Array:
+    """x: (m, d), w1: (d, f), w2: (f, d) -> (m, d)."""
+    m, d = x.shape
+    f = w1.shape[1]
+    assert m % block_m == 0 and f % block_f == 0, (m, f, block_m, block_f)
+    grid = (m // block_m, f // block_f)
+    return pl.pallas_call(
+        functools.partial(_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_f), lambda i, j: (0, j)),
+            pl.BlockSpec((block_f, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, w2)

@@ -1,0 +1,61 @@
+"""Fused MoE expert-FFN Pallas kernel.
+
+The MoE layer is the LM-architecture instance of GeMM-SpMM tile fusion
+(DESIGN.md §4): the dispatch matrix is the sparse ``A``; tokens routed to an
+expert form a fused tile whose intermediate ``H = act(X_e W1_e)`` stays in
+VMEM across the two expert matmuls.  Capacity-dispatched layout: tokens are
+already gathered to (E, cap, d) — the gather/scatter (the wavefront-1
+analogue) happens in XLA around the kernel.
+
+Grid: (experts, cap_blocks, f_blocks), f innermost with output accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w1_ref, w2_ref, out_ref, *, act: str):
+    f = pl.program_id(2)
+    h = jnp.dot(x_ref[0], w1_ref[0], preferred_element_type=jnp.float32)
+    if act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "silu":
+        h = jax.nn.silu(h)
+    part = jnp.dot(h.astype(x_ref.dtype), w2_ref[0],
+                   preferred_element_type=jnp.float32)
+
+    @pl.when(f == 0)
+    def _init():
+        out_ref[0] = part.astype(out_ref.dtype)
+
+    @pl.when(f != 0)
+    def _acc():
+        out_ref[0] = (out_ref[0] + part).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_c", "block_f", "act", "interpret"))
+def fused_moe_ffn(x: jax.Array, w1: jax.Array, w2: jax.Array,
+                  *, block_c: int = 128, block_f: int = 512,
+                  act: str = "silu", interpret: bool = True) -> jax.Array:
+    """x: (E, cap, d); w1: (E, d, f); w2: (E, f, d) -> (E, cap, d)."""
+    e, cap, d = x.shape
+    f = w1.shape[2]
+    assert cap % block_c == 0 and f % block_f == 0, (cap, f, block_c, block_f)
+    grid = (e, cap // block_c, f // block_f)
+    return pl.pallas_call(
+        functools.partial(_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda e_, i, j: (e_, i, 0)),
+            pl.BlockSpec((1, d, block_f), lambda e_, i, j: (e_, 0, j)),
+            pl.BlockSpec((1, block_f, d), lambda e_, i, j: (e_, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d), lambda e_, i, j: (e_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, cap, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, w2)

@@ -1,0 +1,99 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Dispatch policy: on TPU the kernels run compiled (interpret=False); on this
+CPU container they run in interpret mode (kernel body executed as XLA ops) —
+same numerics, same blocking.  ``PALLAS_INTERPRET`` can force either.
+Each op also exposes an ``impl="xla"`` escape hatch used by the dry-run
+(representative HLO without a TPU custom-call) and by sizes whose working set
+exceeds the VMEM budget.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from . import ref
+from .fused_ffn import fused_ffn as _fused_ffn_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .moe import fused_moe_ffn as _moe_pallas
+from .spmm import spmm_ell as _spmm_pallas
+from .tile_fused_gemm_spmm import tile_fused_gemm_spmm_wf0 as _tf_pallas
+
+#: VMEM budget used by choose_kernel_tile (bytes); ~half of v5e VMEM.
+VMEM_BUDGET = 64 * 1024 * 1024
+
+
+def _interpret() -> bool:
+    env = os.environ.get("PALLAS_INTERPRET")
+    if env is not None:
+        return env == "1"
+    return jax.default_backend() != "tpu"
+
+
+def choose_kernel_tile(b_col: int, c_col: int, j0_max: int, w: int,
+                       dtype_bytes: int = 4,
+                       budget: int = VMEM_BUDGET) -> int:
+    """TPU form of the paper's step-2 splitting: the largest 128-aligned
+    uniform tile size t whose VMEM working set fits the budget.
+
+    Working set (elements): B_t (t*bCol) + C (bCol*cCol) + D1_t (t*cCol)
+      + ELL (2*j0_max*w) + densified A tile (j0_max*t) + rows (j0_max*cCol).
+    """
+    t = 128
+    best = 128
+    while t <= 8192:
+        elems = (t * b_col + b_col * c_col + t * c_col
+                 + 2 * j0_max * w + j0_max * t + j0_max * c_col)
+        if elems * dtype_bytes > budget:
+            break
+        best = t
+        t *= 2
+    return best
+
+
+def tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, *, t: int,
+                             impl: str = "pallas"):
+    if impl == "xla":
+        return ref.tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, t=t)
+    return _tf_pallas(cols0, vals0, b, c, t=t, interpret=_interpret())
+
+
+def spmm_ell(cols, vals, x, *, block_rows: int = 256, impl: str = "pallas"):
+    if impl == "xla" or cols.shape[0] % block_rows != 0:
+        return ref.spmm_ell(cols, vals, x)
+    return _spmm_pallas(cols, vals, x, block_rows=block_rows,
+                        interpret=_interpret())
+
+
+def fused_ffn(x, w1, w2, *, block_m: int = 256, block_f: int = 512,
+              act: str = "gelu", impl: str = "pallas"):
+    m, _ = x.shape
+    f = w1.shape[1]
+    if impl == "xla" or m % block_m or f % block_f:
+        return ref.ffn(x, w1, w2, act=act)
+    return _fused_ffn_pallas(x, w1, w2, block_m=block_m, block_f=block_f,
+                             act=act, interpret=_interpret())
+
+
+def fused_moe_ffn(x, w1, w2, *, block_c: int = 128, block_f: int = 512,
+                  act: str = "silu", impl: str = "pallas"):
+    _, cap, _ = x.shape
+    f = w1.shape[2]
+    if impl == "xla" or cap % block_c or f % block_f:
+        return ref.moe_ffn(x, w1, w2, act=act)
+    return _moe_pallas(x, w1, w2, block_c=block_c, block_f=block_f,
+                       act=act, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                    causal: bool = True, window: int = 0,
+                    sm_scale: float | None = None, impl: str = "pallas"):
+    sq, sk = q.shape[2], k.shape[2]
+    if impl == "xla" or sq % block_q or sk % block_k:
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             sm_scale=sm_scale)
+    return _flash_pallas(q, k, v, block_q=block_q, block_k=block_k,
+                         causal=causal, window=window, sm_scale=sm_scale,
+                         interpret=_interpret())

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, *, t: int):
+    """Oracle for kernels.tile_fused_gemm_spmm_wf0."""
+    n_tiles, j0_max, w = cols0.shape
+    d1 = (b @ c).astype(jnp.float32)
+    d1_tiles = d1.reshape(n_tiles, t, -1)
+    # tile-local cols index into that tile's D1 rows
+    gathered = jax.vmap(lambda dt, cc: dt[cc])(d1_tiles, cols0)  # (T, j0, w, c)
+    rows = jnp.einsum("tjw,tjwc->tjc", vals0.astype(jnp.float32), gathered)
+    return d1.astype(b.dtype), rows.astype(b.dtype)
+
+
+def spmm_ell(cols, vals, x):
+    return jnp.einsum("iw,iwc->ic", vals.astype(jnp.float32),
+                      x[cols].astype(jnp.float32)).astype(x.dtype)
+
+
+def ffn(x, w1, w2, act: str = "gelu"):
+    h = x.astype(jnp.float32) @ w1.astype(jnp.float32)
+    h = jax.nn.gelu(h) if act == "gelu" else (
+        jax.nn.silu(h) if act == "silu" else h)
+    return (h @ w2.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_ffn(x, w1, w2, act: str = "silu"):
+    h = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), w1.astype(jnp.float32))
+    h = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, w2.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              sm_scale: float | None = None):
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

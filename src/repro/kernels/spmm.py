@@ -1,0 +1,56 @@
+"""Pallas ELL SpMM kernel: D[i] = sum_w vals[i, w] * X[cols[i, w]].
+
+Used standalone (unfused baseline, wavefront-1 tiles) and as the second-op
+code version inside the fused pipeline.  Rows are blocked over the grid; the
+dense operand ``X`` is staged to VMEM in full (valid for the sizes this
+framework feeds it: X = D1 tile or cCol-wide activations; ops.py falls back
+to the XLA path above the VMEM limit).
+
+The gather is expressed as a one-hot matmul over *column blocks* of X so the
+MXU does the work (TPU has no efficient VMEM row-gather; DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cols_ref, vals_ref, x_ref, out_ref, *, n_rows_x: int):
+    cols = cols_ref[...]                                   # (bm, w)
+    vals = vals_ref[...]                                   # (bm, w)
+    x = x_ref[...]                                         # (n, c)
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (1, n_rows_x), 1)
+
+    def body(w, acc):
+        onehot = (cols[:, w][:, None] == iota_n).astype(vals.dtype)  # (bm, n)
+        return acc + vals[:, w][:, None] * onehot
+
+    w_mat = jax.lax.fori_loop(0, cols.shape[1], body,
+                              jnp.zeros((cols.shape[0], n_rows_x), vals.dtype))
+    out_ref[...] = jnp.dot(w_mat, x, preferred_element_type=jnp.float32
+                           ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmm_ell(cols: jax.Array, vals: jax.Array, x: jax.Array,
+             *, block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """ELL SpMM.  cols/vals: (n_rows, w); x: (n, c).  n_rows % block_rows == 0."""
+    n_rows, w = cols.shape
+    n, c = x.shape
+    assert n_rows % block_rows == 0, (n_rows, block_rows)
+    grid = (n_rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_rows_x=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, w), lambda i: (i, 0)),
+            pl.BlockSpec((n, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, c), x.dtype),
+        interpret=interpret,
+    )(cols, vals, x)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for wavefront-0 fused tiles of GeMM-SpMM.
+
+TPU adaptation of the paper's fused code (Listing 1).  One grid step = one
+fused tile (the paper's OpenMP-parallel tile loop becomes the Pallas grid;
+grid steps are independent — exactly the wavefront-0 guarantee).
+
+Per tile ``v`` covering rows ``[v*t, (v+1)*t)``:
+
+  1. GeMM:  ``D1_t = B_t @ C``      — MXU matmul, ``B_t`` staged to VMEM by
+     BlockSpec, ``D1_t`` *never leaves VMEM* before its consumers run.
+  2. Fused SpMM: the tile-local rows of ``A`` are densified on the fly from
+     ELL into a ``(j0_max, t)`` matrix ``W`` via one-hot accumulation, and the
+     fused rows are ``W @ D1_t`` — a second MXU matmul.  This replaces the
+     CPU scalar gather: on TPU, gather-by-matmul is the idiomatic way to keep
+     the systolic array busy (DESIGN.md §2).
+
+The tile size ``t`` is the TPU analogue of the paper's step-2 splitting: VMEM
+working set is ``t*(bCol+cCol) + j0_max*(t+cCol)`` elements, uniform across
+tiles, so step 2 reduces to choosing the largest 128-aligned ``t`` under the
+VMEM budget (see ``ops.choose_kernel_tile``).
+
+Wavefront 1 (the post-barrier tiles) runs as a second kernel (``spmm.py``)
+reading the now-complete ``D1`` — the ``pallas_call`` boundary *is* the
+paper's single synchronization barrier.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cols_ref, vals_ref, b_ref, c_ref, d1_ref, rows_ref):
+    # ---- GeMM part: D1 tile, stays in VMEM ----
+    d1_t = jnp.dot(b_ref[...], c_ref[...],
+                   preferred_element_type=jnp.float32)          # (t, cCol)
+    d1_ref[...] = d1_t.astype(d1_ref.dtype)
+
+    # ---- fused SpMM part: densify tile-local A rows, multiply on MXU ----
+    cols = cols_ref[0]                                          # (j0_max, w)
+    vals = vals_ref[0]                                          # (j0_max, w)
+    t = d1_t.shape[0]
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)     # (1, t)
+
+    def body(w, acc):
+        onehot = (cols[:, w][:, None] == iota_t).astype(vals.dtype)  # (j0_max, t)
+        return acc + vals[:, w][:, None] * onehot
+
+    w_mat = jax.lax.fori_loop(
+        0, cols.shape[1], body,
+        jnp.zeros((cols.shape[0], t), vals.dtype))              # dense A tile
+    rows = jnp.dot(w_mat, d1_t, preferred_element_type=jnp.float32)
+    rows_ref[0] = rows.astype(rows_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def tile_fused_gemm_spmm_wf0(cols0: jax.Array, vals0: jax.Array,
+                             b: jax.Array, c: jax.Array,
+                             *, t: int, interpret: bool = True):
+    """Run wavefront 0.
+
+    Args:
+      cols0: (T0, j0_max, w) int32 tile-local ELL columns of fused A rows.
+      vals0: (T0, j0_max, w) values.
+      b: (T0*t, bCol) dense B (padded to a multiple of t).
+      c: (bCol, cCol) dense C.
+      t: uniform kernel tile size (rows of B / D1 per tile).
+    Returns:
+      d1: (T0*t, cCol) intermediate, rows0: (T0, j0_max, cCol) fused rows
+      (caller scatters rows0 to D via the schedule's j_rows0).
+    """
+    n_tiles, j0_max, w = cols0.shape
+    b_col, c_col = c.shape
+    assert b.shape[0] == n_tiles * t, (b.shape, n_tiles, t)
+    out_shape = (
+        jax.ShapeDtypeStruct((n_tiles * t, c_col), b.dtype),
+        jax.ShapeDtypeStruct((n_tiles, j0_max, c_col), b.dtype),
+    )
+    grid = (n_tiles,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, j0_max, w), lambda v: (v, 0, 0)),
+            pl.BlockSpec((1, j0_max, w), lambda v: (v, 0, 0)),
+            pl.BlockSpec((t, b_col), lambda v: (v, 0)),
+            pl.BlockSpec((b_col, c_col), lambda v: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t, c_col), lambda v: (v, 0)),
+            pl.BlockSpec((1, j0_max, c_col), lambda v: (v, 0, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(cols0, vals0, b, c)

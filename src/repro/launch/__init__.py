@@ -1,0 +1,3 @@
+from . import mesh, partitioning, steps
+
+__all__ = ["mesh", "partitioning", "steps"]

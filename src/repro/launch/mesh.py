@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Functions (not module-level constants) so importing never touches jax
+device state.  Single pod: (data=16, model=16) = 256 chips (v5e pod).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis composes
+with ``data`` for batch sharding — gradient all-reduce is hierarchical
+(reduce-scatter in-pod over ICI, all-reduce across pods over DCN).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---- hardware constants for the roofline (TPU v5e) ----
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW_PER_LINK = 50e9            # bytes/s per link (~)

@@ -1,0 +1,67 @@
+"""Batched serving driver: prefill + decode loop with KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \\
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models import transformer as T
+from . import steps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+
+    b = args.batch
+    prompts = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab_size)
+    serve_step = jax.jit(steps.make_serve_step(cfg, rules=None))
+
+    # batched prefill: one compiled call fills every layer's KV/state cache
+    cache = T.init_cache(cfg, b, max_len)
+    t0 = time.time()
+    batch = {"tokens": prompts}
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jnp.zeros(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    next_tok, cache = serve_step(params, batch, cache, jnp.int32(0))
+    prefill_t = time.time() - t0
+
+    out = [next_tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        batch = {"tokens": next_tok[:, None]}
+        if cfg.encoder_layers:
+            batch["enc_embeds"] = jnp.zeros(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        next_tok, cache = serve_step(
+            params, batch, cache, jnp.int32(args.prompt_len + i))
+        out.append(next_tok)
+    gen_t = time.time() - t0
+    tokens = jnp.stack(out, axis=1)
+    print(f"generated {tokens.shape} in {gen_t:.2f}s "
+          f"({b * (args.gen - 1) / max(gen_t, 1e-9):.1f} tok/s), "
+          f"prefill {prefill_t:.2f}s")
+    print("sample:", tokens[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

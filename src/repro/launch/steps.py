@@ -1,0 +1,51 @@
+"""Step functions: train_step / prefill_step / serve_step factories."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..optim import adamw
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def make_loss_fn(cfg, rules):
+    def loss_fn(params, batch):
+        logits = T.forward(cfg, params, batch, rules=rules)
+        loss = cross_entropy(logits, batch["labels"])
+        return loss, {"loss": loss}
+    return loss_fn
+
+
+def make_train_step(cfg, opt_cfg, rules):
+    loss_fn = make_loss_fn(cfg, rules)
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw.update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, {**aux, **om}
+    return train_step
+
+
+def make_prefill_step(cfg, rules):
+    def prefill_step(params, batch):
+        return T.forward(cfg, params, batch, rules=rules)
+    return prefill_step
+
+
+def make_serve_step(cfg, rules):
+    """One decode step: new token in, next-token logits + updated cache out."""
+    def serve_step(params, batch, cache, cache_len):
+        logits, new_cache = T.decode_step(
+            cfg, params, batch, cache, cache_len, rules=rules)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return serve_step

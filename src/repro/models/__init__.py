@@ -1,0 +1,3 @@
+from . import gcn, layers, sharding, ssm, transformer
+
+__all__ = ["gcn", "layers", "sharding", "ssm", "transformer"]

@@ -1,0 +1,221 @@
+"""Sub-quadratic sequence mixers: chunked gated linear recurrence.
+
+One engine serves both assigned recurrent families (DESIGN.md §4):
+  * xLSTM mLSTM blocks (matrix memory + exponential gating) — xlstm-1.3b
+  * Mamba/SSD-style selective SSM heads — hymba-1.5b
+
+State per head: H ∈ R^{dk × (dv+1)} — the extra column accumulates the
+normalizer (the "ones trick": v is augmented with a ones column, so
+H[:, -1] = n_t and o = qH[:,:dv] / max(|qH[:,-1]|, 1)).
+
+The chunked form is the tile-fusion structure on the time axis: a chunk is a
+fused tile (intra-chunk work is a pair of matmuls whose intermediate never
+leaves VMEM), the carried state is the single wavefront-1-style dependency.
+
+  H_t = a_t·H_{t-1} + k_tᵀ v_t,   o_t = q_t·H_t,   a_t ∈ (0,1) per head
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_recurrence(q, k, v, log_a, *, chunk: int = 128,
+                              h0=None, normalize: bool = True):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); log_a: (B,S,H) log-decay (<= 0).
+
+    Returns (o: (B,S,H,dv), h_final: (B,H,dk,dv[+1])).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+        dv_aug = dv + 1
+    else:
+        dv_aug = dv
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+    f32 = jnp.float32
+
+    def to_chunks(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q).astype(f32), to_chunks(k).astype(f32), \
+        to_chunks(v).astype(f32)
+    lac = to_chunks(log_a).astype(f32)                     # (nc, b, L, h)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dk, dv_aug), f32)
+
+    def step(hstate, xs):
+        qb, kb, vb, la = xs                                # (b,L,h,*)
+        cum = jnp.cumsum(la, axis=1)                       # inclusive ∑ log a
+        total = cum[:, -1]                                 # (b,h)
+        # inter-chunk: o_i += (A_i) q_i · H0
+        qdec = qb * jnp.exp(cum)[..., None]
+        o_inter = jnp.einsum("blhk,bhkv->blhv", qdec, hstate)
+        # intra-chunk: S_ij = (q_i·k_j) exp(cum_i - cum_j), j <= i.
+        # Mask in LOG space: for j > i the exponent is positive and exp()
+        # overflows — inf·0 in the masked branch would poison gradients.
+        scores = jnp.einsum("blhk,bmhk->bhlm", qb, kb)
+        decay = cum[..., None].swapaxes(1, 2) - cum.transpose(0, 2, 1)[:, :, None, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(mask[None, None], decay, -jnp.inf)
+        scores = scores * jnp.exp(decay)
+        o_intra = jnp.einsum("bhlm,bmhv->blhv", scores, vb)
+        # state update: H' = A_L H0 + Σ_j (A_L/A_j) k_jᵀ v_j
+        kdec = kb * jnp.exp(total[:, None] - cum)[..., None]
+        h_new = hstate * jnp.exp(total)[..., None, None] + \
+            jnp.einsum("blhk,blhv->bhkv", kdec, vb)
+        return h_new, o_inter + o_intra
+
+    h_final, oc = jax.lax.scan(step, h0, (qc, kc, vc, lac))
+    o = oc.swapaxes(0, 1).reshape(b, nc * chunk, h, dv_aug)[:, :s]
+    if normalize:
+        num, den = o[..., :dv], o[..., dv]
+        o = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return o.astype(q.dtype), h_final
+
+
+def linear_recurrence_step(q, k, v, log_a, hstate, *, normalize: bool = True):
+    """Single decode step.  q,k: (B,H,dk); v: (B,H,dv); log_a: (B,H);
+    hstate: (B,H,dk,dv[+1]) carried f32 state."""
+    f32 = jnp.float32
+    dv = v.shape[-1]
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    h_new = hstate * a + jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(f32), v.astype(f32))
+    o = jnp.einsum("bhk,bhkv->bhv", q.astype(f32), h_new)
+    if normalize:
+        o = o[..., :dv] / jnp.maximum(jnp.abs(o[..., dv]), 1.0)[..., None]
+    return o.astype(q.dtype), h_new
+
+
+# ------------------------------------------------------------------ blocks --
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = 1.0 / (shape[0] ** 0.5)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def mlstm_init(key, cfg, dtype):
+    """xLSTM mLSTM block params: 2x up-proj, per-head q/k/v + f/i gates."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = cfg.ssm_head_dim
+    inner = h * dh
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": _init(ks[0], (d, 2 * inner), dtype=dtype),
+        "wq": _init(ks[1], (inner, inner), dtype=dtype),
+        "wk": _init(ks[2], (inner, inner), dtype=dtype),
+        "wv": _init(ks[3], (inner, inner), dtype=dtype),
+        "w_f": _init(ks[4], (inner, h), scale=0.02, dtype=jnp.float32),
+        "w_i": _init(ks[5], (inner, h), scale=0.02, dtype=jnp.float32),
+        "w_down": _init(ks[6], (inner, d), dtype=dtype),
+    }
+
+
+def mlstm_apply(p, cfg, x, *, cache=None):
+    """x: (B,S,d) -> (B,S,d).  cache: carried state for decode (S==1)."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.ssm_head_dim
+    up = x @ p["w_up"]
+    main, gate = jnp.split(up, 2, axis=-1)                 # (b,s,inner)
+    q = (main @ p["wq"]).reshape(b, s, h, dh)
+    k = (main @ p["wk"]).reshape(b, s, h, dh) / (dh ** 0.5)
+    v = (main @ p["wv"]).reshape(b, s, h, dh)
+    log_f = jax.nn.log_sigmoid(main.astype(jnp.float32) @ p["w_f"])  # (b,s,h)
+    i_gate = jnp.exp(jax.nn.log_sigmoid(main.astype(jnp.float32) @ p["w_i"]))
+    k = k * i_gate[..., None].astype(k.dtype)
+    if s > 1:   # training or batched prefill (cache = carried-in state)
+        o, h_final = chunked_linear_recurrence(
+            q, k, v, log_f, chunk=min(128, s), h0=cache)
+    else:
+        h0 = cache if cache is not None else \
+            jnp.zeros((b, h, dh, dh + 1), jnp.float32)
+        o, h_final = linear_recurrence_step(
+            q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], h0)
+        o = o[:, None]
+    o = o.reshape(b, s, -1) * jax.nn.silu(gate)
+    return o @ p["w_down"], h_final
+
+
+def slstm_init(key, cfg, dtype):
+    """sLSTM block: scalar-memory LSTM with exponential gating (elementwise)."""
+    d = cfg.d_model
+    inner = cfg.n_heads * cfg.ssm_head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        "w_up": _init(ks[0], (d, 4 * inner), dtype=dtype),   # z, i, f, o gates
+        "w_rec": _init(ks[1], (inner, 4 * inner), scale=0.02, dtype=dtype),
+        "w_down": _init(ks[2], (inner, d), dtype=dtype),
+    }
+
+
+def slstm_apply(p, cfg, x, *, cache=None):
+    b, s, _ = x.shape
+    inner = cfg.n_heads * cfg.ssm_head_dim
+    pre = (x @ p["w_up"]).astype(jnp.float32)              # (b,s,4*inner)
+
+    def step(carry, u):
+        c, hid = carry
+        u = u + hid @ p["w_rec"].astype(jnp.float32)
+        z, i, f, o = jnp.split(u, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+        hid = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (c, hid), hid
+
+    init = cache if cache is not None else (
+        jnp.zeros((b, inner), jnp.float32), jnp.zeros((b, inner), jnp.float32))
+    (c, hid), hs = jax.lax.scan(step, init, pre.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1).astype(x.dtype) @ p["w_down"]
+    return out, (c, hid)
+
+
+def mamba_init(key, cfg, dtype):
+    """Selective-SSM heads (hymba's mamba half), SSD/linear-attention form."""
+    d = cfg.d_model
+    h, dh, n = cfg.n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    inner = h * dh
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": _init(ks[0], (d, 2 * inner), dtype=dtype),   # x and z branch
+        "w_bc": _init(ks[1], (inner, 2 * h * n), dtype=dtype),
+        "w_dt": _init(ks[2], (inner, h), scale=0.02, dtype=jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),               # per-head A
+        "w_out_proj": _init(ks[4], (inner, d), dtype=dtype),
+    }
+
+
+def mamba_apply(p, cfg, x, *, cache=None):
+    b, s, _ = x.shape
+    h, dh, n = cfg.n_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin, z = jnp.split(x @ p["w_in"], 2, axis=-1)          # (b,s,inner)
+    bc = xin @ p["w_bc"]
+    b_in, c_out = jnp.split(bc.reshape(b, s, h, 2 * n), 2, axis=-1)
+    dt = jax.nn.softplus(xin.astype(jnp.float32) @ p["w_dt"])      # (b,s,h)
+    a = jnp.exp(p["a_log"])                                # (h,) > 0
+    log_decay = -dt * a                                    # (b,s,h)
+    v = (xin.reshape(b, s, h, dh) * dt[..., None].astype(x.dtype))
+    if s > 1:   # training or batched prefill (cache = carried-in state)
+        o, h_final = chunked_linear_recurrence(
+            c_out, b_in, v, log_decay, chunk=min(128, s), h0=cache,
+            normalize=False)
+    else:
+        h0 = cache if cache is not None else \
+            jnp.zeros((b, h, n, dh), jnp.float32)
+        o, h_final = linear_recurrence_step(
+            c_out[:, 0], b_in[:, 0], v[:, 0], log_decay[:, 0], h0,
+            normalize=False)
+        o = o[:, None]
+    o = o.reshape(b, s, -1) * jax.nn.silu(z)
+    return o @ p["w_out_proj"], h_final

@@ -1,0 +1,319 @@
+"""Unified LM: decoder-only / enc-dec / MoE / SSM / hybrid, scan-stacked.
+
+Layers are stacked with a leading scan axis so HLO size and compile time are
+O(1) in depth — required for the 80-layer dry-run cells.  Block flavour is
+selected by ``cfg.block_pattern``:
+
+  attn          — self-attention + FFN/MoE          (dense, moe, vlm, enc-dec)
+  mlstm7+slstm  — xLSTM groups: 7 mLSTM + 1 sLSTM   (xlstm-1.3b)
+  attn+mamba    — parallel attention & mamba heads  (hymba-1.5b)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm as S
+from .sharding import ShardingRules, shard
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _unroll(cfg, n=None):
+    """Scan unroll factor — full for dry-run FLOP accounting (base.py)."""
+    return (n if n is not None else cfg.n_layers) if cfg.scan_unroll else 1
+
+
+def _maybe_remat(cfg, fn):
+    """remat policy: none | full | dots (save matmul outputs — §Perf iter 4:
+    trades activation memory for no-matmul-recompute in backward)."""
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+# ============================================================== init =======
+def _attn_block_init(key, cfg, dtype, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+         "ln2": jnp.ones((cfg.d_model,), dtype)}
+    p["attn"] = L.mla_init(ks[0], cfg, dtype) if cfg.mla \
+        else L.gqa_init(ks[0], cfg, dtype)
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,), dtype)
+        p["xattn"] = L.gqa_init(ks[1], cfg, dtype)
+    if cfg.n_experts:
+        p["moe"] = L.moe_init(ks[2], cfg, dtype)
+    else:
+        p["ffn"] = L.ffn_init(ks[2], cfg, dtype)
+    return p
+
+
+def _hybrid_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.gqa_init(ks[0], cfg, dtype),
+        "mamba": S.mamba_init(ks[1], cfg, dtype),
+        "ffn": L.ffn_init(ks[2], cfg, dtype),
+    }
+
+
+def _stack_init(fn, key, n, *args):
+    keys = jax.random.split(key, max(n, 1))
+    return jax.vmap(lambda k: fn(k, *args))(keys)
+
+
+def init_params(cfg, key):
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    params = {"tok": L.embed_init(ks[0], cfg, dtype),
+              "ln_f": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.frontend != "none":
+        # stubbed modality frontend: precomputed frame/patch embeddings are
+        # projected into d_model (input_specs provides the embeddings).
+        params["frontend_proj"] = L._init(
+            jax.random.fold_in(key, 9), (cfg.d_model, cfg.d_model), dtype=dtype)
+    if cfg.block_pattern == "mlstm7+slstm":
+        assert cfg.n_layers % 8 == 0, "xLSTM pattern needs n_layers % 8 == 0"
+        g = cfg.n_layers // 8
+        keys = jax.random.split(ks[1], g)
+        params["mlstm"] = jax.vmap(
+            lambda k: _stack_init(S.mlstm_init, k, 7, cfg, dtype))(keys)
+        params["slstm"] = _stack_init(S.slstm_init, ks[2], g, cfg, dtype)
+        params["ln_m"] = jnp.ones((g, 7, cfg.d_model), dtype)
+        params["ln_s"] = jnp.ones((g, cfg.d_model), dtype)
+    elif cfg.block_pattern == "attn+mamba":
+        params["layers"] = _stack_init(
+            _hybrid_block_init, ks[1], cfg.n_layers, cfg, dtype)
+    else:
+        cross = cfg.encoder_layers > 0
+        params["layers"] = _stack_init(
+            lambda k, c, d: _attn_block_init(k, c, d, cross=cross),
+            ks[1], cfg.n_layers, cfg, dtype)
+        if cfg.encoder_layers:
+            enc_cfg = cfg
+            params["enc_layers"] = _stack_init(
+                lambda k, c, d: _attn_block_init(k, c, d, cross=False),
+                ks[3], cfg.encoder_layers, cfg, dtype)
+            params["ln_enc"] = jnp.ones((cfg.d_model,), dtype)
+    return params
+
+
+# ============================================================ forward ======
+def _mixer(lp, cfg, x, pos, rules, cache=None, cache_len=None):
+    """The sequence mixer of an attn-family block."""
+    if cfg.mla:
+        return L.mla_attention(lp["attn"], cfg, x, pos=pos, rules=rules,
+                               cache=cache, cache_len=cache_len)
+    return L.gqa_attention(lp["attn"], cfg, x, pos=pos, rules=rules,
+                           cache=cache, cache_len=cache_len,
+                           window=cfg.window)
+
+
+def _channel(lp, cfg, x, rules):
+    if cfg.n_experts:
+        return L.moe_apply(lp["moe"], cfg, x, rules)
+    return L.ffn_apply(lp["ffn"], cfg, x, rules)
+
+
+def _attn_block(cfg, rules, pos, enc_out, x, lp,
+                cache=None, cache_len=None):
+    h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    a, new_cache = _mixer(lp, cfg, h, pos, rules, cache, cache_len)
+    x = x + a
+    if enc_out is not None:
+        h = L.rms_norm(lp["ln_x"], x, cfg.norm_eps)
+        a, _ = L.cross_attention(lp["xattn"], cfg, h, enc_out, rules=rules)
+        x = x + a
+    h = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    x = x + _channel(lp, cfg, h, rules)
+    if rules is not None:
+        x = shard(x, rules.act_btd)
+    return x, new_cache
+
+
+def _hybrid_block(cfg, rules, pos, x, lp, cache=None, cache_len=None):
+    h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    a, kv_cache = L.gqa_attention(lp["attn"], cfg, h, pos=pos, rules=rules,
+                                  cache=None if cache is None else cache[:2],
+                                  cache_len=cache_len, window=cfg.window)
+    m, ssm_state = S.mamba_apply(lp["mamba"], cfg, h,
+                                 cache=None if cache is None else cache[2])
+    x = x + (a + m) * 0.5                      # parallel heads, averaged
+    h = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    x = x + L.ffn_apply(lp["ffn"], cfg, h, rules)
+    if rules is not None:
+        x = shard(x, rules.act_btd)
+    new_cache = None if cache is None else (*kv_cache, ssm_state)
+    return x, new_cache
+
+
+def _embed_inputs(cfg, params, batch, rules):
+    dtype = _dtype(cfg)
+    if "tokens" in batch:
+        x = params["tok"]["embed"][batch["tokens"]]
+    else:  # stubbed modality frontend: precomputed embeddings
+        x = batch["embeds"].astype(dtype) @ params["frontend_proj"]
+    if rules is not None:
+        x = shard(x, rules.act_btd)
+    return x
+
+
+def _encoder(cfg, params, enc_embeds, rules):
+    import dataclasses
+    x = enc_embeds.astype(_dtype(cfg)) @ params["frontend_proj"]
+    pos = jnp.arange(x.shape[1])
+    enc_cfg = dataclasses.replace(cfg, is_encoder=True, mla=False,
+                                  n_experts=0, window=0)
+    base_block = functools.partial(_attn_block, enc_cfg, rules, pos, None)
+    block = _maybe_remat(cfg, base_block)
+
+    def f(c, lp):
+        y, _ = block(c, lp)
+        return y, None
+
+    x, _ = jax.lax.scan(f, x, params["enc_layers"],
+                        unroll=_unroll(cfg, cfg.encoder_layers))
+    return L.rms_norm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def forward(cfg, params, batch, *, rules: Optional[ShardingRules] = None):
+    """batch: {"tokens" | "embeds", ["enc_embeds"]} -> logits (B, S, V)."""
+    x = _embed_inputs(cfg, params, batch, rules)
+    pos = jnp.arange(x.shape[1])
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encoder(cfg, params, batch["enc_embeds"], rules)
+
+    if cfg.block_pattern == "mlstm7+slstm":
+        def group(c, gp):
+            def mblock(c2, lp):
+                ln, bp = lp
+                h = L.rms_norm(ln, c2, cfg.norm_eps)
+                o, _ = S.mlstm_apply(bp, cfg, h)
+                return c2 + o, None
+            mb = _maybe_remat(cfg, mblock)
+            c, _ = jax.lax.scan(mb, c, (gp["ln_m"], gp["mlstm"]),
+                                unroll=_unroll(cfg, 7))
+            h = L.rms_norm(gp["ln_s"], c, cfg.norm_eps)
+            o, _ = S.slstm_apply(gp["slstm"], cfg, h)
+            return c + o, None
+        x, _ = jax.lax.scan(group, x, {
+            "mlstm": params["mlstm"], "slstm": params["slstm"],
+            "ln_m": params["ln_m"], "ln_s": params["ln_s"]},
+            unroll=_unroll(cfg, cfg.n_layers // 8))
+    elif cfg.block_pattern == "attn+mamba":
+        def f(c, lp):
+            y, _ = _hybrid_block(cfg, rules, pos, c, lp)
+            return y, None
+        fb = _maybe_remat(cfg, f)
+        x, _ = jax.lax.scan(fb, x, params["layers"], unroll=_unroll(cfg))
+    else:
+        def f(c, lp):
+            y, _ = _attn_block(cfg, rules, pos, enc_out, c, lp)
+            return y, None
+        fb = _maybe_remat(cfg, f)
+        x, _ = jax.lax.scan(fb, x, params["layers"], unroll=_unroll(cfg))
+
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = x @ params["tok"]["lm_head"]
+    if rules is not None:
+        logits = shard(logits, rules.logits)
+    return logits
+
+
+# ============================================================= decode ======
+def init_cache(cfg, batch_size: int, max_len: int):
+    """KV/state caches, leading layer axis, ready for lax.scan."""
+    dtype = _dtype(cfg)
+    lcount = cfg.n_layers
+    c = min(max_len, cfg.window) if cfg.window > 0 else max_len
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.block_pattern == "mlstm7+slstm":
+        g = cfg.n_layers // 8
+        h, sdh = cfg.n_heads, cfg.ssm_head_dim
+        inner = h * sdh
+        return {
+            "mlstm": jnp.zeros((g, 7, batch_size, h, sdh, sdh + 1), jnp.float32),
+            "slstm": (jnp.zeros((g, batch_size, inner), jnp.float32),
+                      jnp.zeros((g, batch_size, inner), jnp.float32)),
+        }
+    if cfg.block_pattern == "attn+mamba":
+        return (
+            jnp.zeros((lcount, batch_size, hkv, c, dh), dtype),
+            jnp.zeros((lcount, batch_size, hkv, c, dh), dtype),
+            jnp.zeros((lcount, batch_size, cfg.n_heads, cfg.ssm_state,
+                       cfg.ssm_head_dim), jnp.float32),
+        )
+    if cfg.mla:
+        return jnp.zeros((lcount, batch_size, max_len, cfg.mla_kv_rank), dtype)
+    return (
+        jnp.zeros((lcount, batch_size, hkv, c, dh), dtype),
+        jnp.zeros((lcount, batch_size, hkv, c, dh), dtype),
+    )
+
+
+def decode_step(cfg, params, batch, cache, cache_len,
+                *, rules: Optional[ShardingRules] = None):
+    """One decode step — or a batched PREFILL when given S > 1 tokens.
+
+    batch: {"tokens": (B,S)} (or {"embeds": (B,S,d)}); S == 1 is the decode
+    step; S > 1 runs a batched prefill that fills the caches (requires
+    cache_len == 0 for attention caches).
+    cache_len: scalar int32 — tokens already in the cache.
+    Returns (logits (B,S,V), new_cache).
+    """
+    x = _embed_inputs(cfg, params, batch, rules)
+    s = x.shape[1]
+    pos = cache_len + jnp.arange(s, dtype=jnp.int32)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encoder(cfg, params, batch["enc_embeds"], rules)
+
+    if cfg.block_pattern == "mlstm7+slstm":
+        def group(c, xs):
+            gp, gc = xs
+            def mstep(c2, xs2):
+                (ln, bp), st = xs2
+                h = L.rms_norm(ln, c2, cfg.norm_eps)
+                o, st2 = S.mlstm_apply(bp, cfg, h, cache=st)
+                return c2 + o, st2
+            c, mst = jax.lax.scan(
+                mstep, c, ((gp["ln_m"], gp["mlstm"]), gc["mlstm"]),
+                unroll=_unroll(cfg, 7))
+            h = L.rms_norm(gp["ln_s"], c, cfg.norm_eps)
+            o, sst = S.slstm_apply(gp["slstm"], cfg, h, cache=gc["slstm"])
+            return c + o, {"mlstm": mst, "slstm": sst}
+        x, new_cache = jax.lax.scan(group, x, (
+            {"mlstm": params["mlstm"], "slstm": params["slstm"],
+             "ln_m": params["ln_m"], "ln_s": params["ln_s"]}, cache),
+            unroll=_unroll(cfg, cfg.n_layers // 8))
+    elif cfg.block_pattern == "attn+mamba":
+        def f(c, xs):
+            lp, lc = xs
+            return _hybrid_block(cfg, rules, pos, c, lp,
+                                 cache=lc, cache_len=cache_len)
+        x, new_cache = jax.lax.scan(f, x, (params["layers"], cache),
+                                    unroll=_unroll(cfg))
+    else:
+        def f(c, xs):
+            lp, lc = xs
+            return _attn_block(cfg, rules, pos, enc_out, c, lp,
+                               cache=lc, cache_len=cache_len)
+        x, new_cache = jax.lax.scan(f, x, (params["layers"], cache),
+                                    unroll=_unroll(cfg))
+
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = x @ params["tok"]["lm_head"]
+    return logits, new_cache

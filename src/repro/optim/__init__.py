@@ -1,0 +1,4 @@
+from .adamw import OptConfig, OptState, init, update, schedule, global_norm
+
+__all__ = ["OptConfig", "OptState", "init", "update", "schedule",
+           "global_norm"]

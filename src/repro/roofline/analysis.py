@@ -1,0 +1,117 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` (post-SPMD,
+per-device module).  Collective bytes are NOT in cost_analysis — we parse
+the optimized HLO text and sum result sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+from ..launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = bf16[16,512,128]{2,1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s+(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" +
+    "|".join(_COLLECTIVES) + r")[\.\(]")
+# tuple-result collectives:  = (bf16[...], bf16[...]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+(" + "|".join(_COLLECTIVES) + r")[\.\(]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _size_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes in the (per-device) module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _size_bytes(dtype, dims)
+            counts[kind] += 1
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for dt, dims in _SHAPE_RE.findall(shapes):
+                out[kind] += _size_bytes(dt, dims)
+            counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_device: float
+    useful_ratio: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(cost: dict, coll: dict, *, model_flops_global: float,
+             n_devices: int, peak=PEAK_FLOPS_BF16, hbm=HBM_BW,
+             ici=ICI_BW_PER_LINK) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    by = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll["total_bytes"])
+    terms = {
+        "compute": flops / peak,
+        "memory": by / hbm,
+        "collective": cb / ici,
+    }
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_global / n_devices
+    return Roofline(
+        flops=flops, bytes_accessed=by, coll_bytes=cb,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], bottleneck=bottleneck,
+        model_flops_per_device=mf,
+        useful_ratio=(mf / flops) if flops else 0.0,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N_active·D for inference."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("t,j0,w,bcol,ccol", [
+    (128, 16, 8, 32, 16), (256, 8, 4, 16, 64), (128, 32, 1, 8, 8)])
+def test_tile_fused_gemm_spmm(t, j0, w, bcol, ccol):
+    T = 3
+    cols0 = jnp.asarray(RNG.integers(0, t, (T, j0, w)), jnp.int32)
+    vals0 = arr((T, j0, w))
+    b = arr((T * t, bcol))
+    c = arr((bcol, ccol))
+    d1k, rk = ops.tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, t=t)
+    d1r, rr = ref.tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, t=t)
+    np.testing.assert_allclose(np.asarray(d1k), np.asarray(d1r), **TOL[jnp.float32])
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("n,w,c,block", [(256, 4, 8, 64), (512, 9, 16, 128),
+                                         (128, 1, 32, 128)])
+def test_spmm_ell(n, w, c, block):
+    cols = jnp.asarray(RNG.integers(0, n, (n, w)), jnp.int32)
+    vals = arr((n, w))
+    x = arr((n, c))
+    got = ops.spmm_ell(cols, vals, x, block_rows=block)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.spmm_ell(cols, vals, x)),
+                               **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,d,f,bm,bf,act", [
+    (256, 64, 512, 128, 256, "gelu"), (128, 32, 256, 128, 128, "silu")])
+def test_fused_ffn(m, d, f, bm, bf, act, dtype):
+    x, w1, w2 = arr((m, d), dtype), arr((d, f), dtype, 0.05), \
+        arr((f, d), dtype, 0.05)
+    got = ops.fused_ffn(x, w1, w2, block_m=bm, block_f=bf, act=act)
+    want = ref.ffn(x, w1, w2, act=act)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("e,cap,d,f", [(4, 128, 64, 512), (2, 256, 32, 128)])
+def test_fused_moe_ffn(e, cap, d, f):
+    x, w1, w2 = arr((e, cap, d)), arr((e, d, f), scale=0.05), \
+        arr((e, f, d), scale=0.05)
+    got = ops.fused_moe_ffn(x, w1, w2, block_c=64, block_f=128)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.moe_ffn(x, w1, w2)),
+                               **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 32)])
+@pytest.mark.parametrize("s,dh", [(128, 32), (256, 64)])
+def test_flash_attention(causal, window, s, dh):
+    q, k, v = (arr((2, 2, s, dh)) for _ in range(3))
+    got = ops.flash_attention(q, k, v, block_q=64, block_k=64,
+                              causal=causal, window=window)
+    want = ref.attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_long_kv():
+    """Decode-like: 1 query against long kv."""
+    q = arr((1, 2, 128, 32))
+    k = arr((1, 2, 1024, 32))
+    v = arr((1, 2, 1024, 32))
+    got = ops.flash_attention(q, k, v, block_q=128, block_k=256, causal=False)
+    want = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_choose_kernel_tile_fits_budget():
+    for bcol, ccol, j0, w in [(64, 64, 32, 8), (512, 128, 128, 64)]:
+        t = ops.choose_kernel_tile(bcol, ccol, j0, w)
+        elems = (t * bcol + bcol * ccol + t * ccol + 2 * j0 * w + j0 * t
+                 + j0 * ccol)
+        assert elems * 4 <= ops.VMEM_BUDGET
+        assert t % 128 == 0

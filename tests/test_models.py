@@ -1,0 +1,101 @@
+"""Per-arch smoke tests: reduced configs, forward + train step + decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch import steps
+from repro.models import transformer as T
+from repro.optim import OptConfig, adamw
+
+B, S = 2, 32
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, with_labels=True, seq=S):
+    batch = {}
+    if cfg.frontend == "none" or cfg.encoder_layers:
+        batch["tokens"] = jax.random.randint(KEY, (B, seq), 0, cfg.vocab_size)
+    else:
+        batch["embeds"] = jax.random.normal(KEY, (B, seq, cfg.d_model))
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model))
+    if with_labels:
+        batch["labels"] = jax.random.randint(KEY, (B, seq), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch, reduced=True)
+    params = T.init_params(cfg, KEY)
+    logits = T.forward(cfg, params, make_batch(cfg, with_labels=False))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_decreases_loss(arch):
+    cfg = get_config(arch, reduced=True)
+    params = T.init_params(cfg, KEY)
+    opt_state = adamw.init(params)
+    step = jax.jit(steps.make_train_step(
+        cfg, OptConfig(lr=1e-2, warmup_steps=1, total_steps=20), rules=None))
+    batch = make_batch(cfg)
+    losses = []
+    for _ in range(8):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert not np.isnan(losses).any()
+    # memorizes a fixed batch (min over tail: exp-gated recurrent archs are
+    # noisy step to step at this lr)
+    assert min(losses[2:]) < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_forward(arch):
+    """Prefix decode step-by-step == teacher-forced forward (logits agree)."""
+    cfg = get_config(arch, reduced=True)
+    params = T.init_params(cfg, KEY)
+    seq = 8
+    batch = make_batch(cfg, with_labels=False, seq=seq)
+    full = T.forward(cfg, params, batch)
+    cache = T.init_cache(cfg, B, seq)
+    outs = []
+    for i in range(seq):
+        db = {}
+        if "tokens" in batch:
+            db["tokens"] = batch["tokens"][:, i:i + 1]
+        else:
+            db["embeds"] = batch["embeds"][:, i:i + 1]
+        if cfg.encoder_layers:
+            db["enc_embeds"] = batch["enc_embeds"]
+        lg, cache = T.decode_step(cfg, params, db, cache, jnp.int32(i))
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1).astype(jnp.float32)
+    want = full.astype(jnp.float32)
+    # bf16 accumulation differs between the chunked (forward) and stepwise
+    # (decode) paths; verified 3e-5 agreement in f32 — tolerance covers bf16
+    tol = 0.3 if cfg.block_pattern != "attn" else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_param_count_sane():
+    # full configs should be in the advertised ballpark
+    approx = {
+        "stablelm-1.6b": (1.0e9, 3.0e9),
+        "qwen2.5-3b": (2.0e9, 4.5e9),
+        "minitron-8b": (6e9, 11e9),
+        "xlstm-1.3b": (0.8e9, 2.5e9),
+    }
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("granite-moe-3b-a800m")
+    assert cfg.param_count(active_only=True) < cfg.param_count()

@@ -1,0 +1,103 @@
+"""Scheduler (Algorithm 1) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse.formats import CSR
+from repro.core.sparse.random import banded_spd, powerlaw_graph
+from repro.core.tilefusion import (build_schedule, fused_compute_ratio,
+                                   tile_cost_elements, to_device_schedule)
+
+
+def random_csr(n, density, seed):
+    rng = np.random.default_rng(seed)
+    m = int(density * n * n)
+    rows = rng.integers(0, n, m)
+    cols = rng.integers(0, n, m)
+    vals = rng.standard_normal(m)
+    return CSR.from_coo(n, n, rows, cols, vals)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 200), density=st.floats(0.001, 0.1),
+       seed=st.integers(0, 10), ct=st.sampled_from([8, 16, 64, 2048]),
+       p=st.integers(1, 8), uniform=st.booleans())
+def test_schedule_invariants(n, density, seed, ct, p, uniform):
+    a = random_csr(n, density, seed)
+    sched = build_schedule(a, b_col=16, c_col=16, p=p, cache_size=5_000.0,
+                           ct_size=ct, uniform_split=uniform)
+    sched.validate()  # I covered exactly once; J covered exactly once
+    assert len(sched.wavefronts) == 2          # paper: exactly 1 barrier
+    assert 0.0 <= sched.fused_ratio <= 1.0
+    # the defining fusion property: every fused row's deps are inside its tile
+    for tl in sched.wavefronts[0]:
+        for j in tl.j_rows:
+            cols = a.indices[a.indptr[j]:a.indptr[j + 1]]
+            assert ((cols >= tl.i_start) & (cols < tl.i_end)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 5))
+def test_step2_respects_cache(seed):
+    a = random_csr(256, 0.02, seed)
+    cache = 3_000.0
+    sched = build_schedule(a, b_col=16, c_col=16, p=4, cache_size=cache,
+                           ct_size=64)
+    for w, wf in enumerate(sched.wavefronts):
+        for tl in wf:
+            cost = tile_cost_elements(a, tl.i_start, tl.i_end, tl.j_rows,
+                                      16, 16, False)
+            # splitting bottoms out at 1-row tiles; only those may exceed
+            if tl.n_i > 1 or (tl.n_i == 0 and tl.n_j > 1):
+                assert cost <= cache, (w, tl.i_start, tl.i_end, cost)
+
+
+def test_uniform_split_is_uniform():
+    a = banded_spd(512, 8, seed=0)
+    sched = build_schedule(a, b_col=64, c_col=64, p=4, cache_size=50_000.0,
+                           ct_size=256, uniform_split=True)
+    sizes = {tl.n_i for tl in sched.wavefronts[0]}
+    assert len(sizes - {sched.t}) <= 1  # last tile may be short
+
+
+def test_fused_ratio_monotone_in_tile_size():
+    """Paper Fig 4: fused ratio is non-decreasing in coarse tile size."""
+    a = powerlaw_graph(1024, 8, seed=3)
+    ratios = []
+    for ct in (32, 128, 512, 1024):
+        s = build_schedule(a, b_col=8, c_col=8, p=1, cache_size=1e12,
+                           ct_size=ct)
+        ratios.append(s.fused_ratio)
+    assert all(b >= a_ - 1e-9 for a_, b in zip(ratios, ratios[1:])), ratios
+
+
+def test_load_balance_constraint():
+    """|T_w| >= p when there is enough work (paper's constraint)."""
+    a = banded_spd(2048, 4, seed=1)
+    for p in (2, 4, 8):
+        s = build_schedule(a, b_col=8, c_col=8, p=p, cache_size=1e12,
+                           ct_size=2048)
+        assert len(s.wavefronts[0]) >= p
+
+
+def test_fig1_ratio_bounds():
+    a = powerlaw_graph(512, 8, seed=2)
+    r = fused_compute_ratio(a, ct_size=128)
+    assert 0.0 <= r <= 1.0
+
+
+def test_device_schedule_roundtrip():
+    a = powerlaw_graph(300, 6, seed=4)
+    sched = build_schedule(a, b_col=8, c_col=8, p=4, cache_size=20_000.0,
+                           ct_size=64)
+    ds = to_device_schedule(a, sched)
+    assert ds.n_i == 300 and ds.n_j == 300
+    # every real (non-pad) wavefront-0 ELL column is tile-local
+    for v in range(ds.n_tiles0):
+        real = ds.ell_vals0[v] != 0
+        if real.any():
+            assert ds.ell_cols0[v][real].min() >= 0
+            assert ds.ell_cols0[v][real].max() < ds.t_pad
+    tm = ds.hbm_traffic_model(8, 8)
+    assert 0.0 <= tm["traffic_saving"] <= 1.0
+    assert tm["fused_bytes"] <= tm["unfused_bytes"]

@@ -1,0 +1,70 @@
+"""Chunked linear recurrence vs step-by-step reference (property tests)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import (chunked_linear_recurrence,
+                              linear_recurrence_step)
+
+
+def ref_recurrence(q, k, v, log_a, normalize=True):
+    """O(S) step-by-step oracle."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if normalize:
+        v = np.concatenate([v, np.ones((b, s, h, 1))], -1)
+    hstate = np.zeros((b, h, dk, v.shape[-1]))
+    outs = np.zeros((b, s, h, v.shape[-1]))
+    for t in range(s):
+        a = np.exp(log_a[:, t])[..., None, None]
+        hstate = hstate * a + np.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        outs[:, t] = np.einsum("bhk,bhkv->bhv", q[:, t], hstate)
+    if normalize:
+        num, den = outs[..., :dv], outs[..., dv]
+        outs = num / np.maximum(np.abs(den), 1.0)[..., None]
+    return outs, hstate
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(1, 70), chunk=st.sampled_from([4, 16, 128]),
+       seed=st.integers(0, 5), normalize=st.booleans())
+def test_chunked_matches_stepwise(s, chunk, seed, normalize):
+    rng = np.random.default_rng(seed)
+    b, h, dk, dv = 2, 3, 4, 5
+    q = rng.standard_normal((b, s, h, dk))
+    k = rng.standard_normal((b, s, h, dk))
+    v = rng.standard_normal((b, s, h, dv))
+    log_a = -np.abs(rng.standard_normal((b, s, h)))  # decay <= 1
+    want, want_h = ref_recurrence(q, k, v, log_a, normalize)
+    got, got_h = chunked_linear_recurrence(
+        jnp.asarray(q, jnp.float32), jnp.asarray(k, jnp.float32),
+        jnp.asarray(v, jnp.float32), jnp.asarray(log_a, jnp.float32),
+        chunk=chunk, normalize=normalize)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(got_h), want_h, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_single_step_matches_chunked():
+    rng = np.random.default_rng(0)
+    b, h, dk, dv, s = 1, 2, 4, 4, 6
+    q = rng.standard_normal((b, s, h, dk)).astype(np.float32)
+    k = rng.standard_normal((b, s, h, dk)).astype(np.float32)
+    v = rng.standard_normal((b, s, h, dv)).astype(np.float32)
+    log_a = -np.abs(rng.standard_normal((b, s, h))).astype(np.float32)
+    full, h_full = chunked_linear_recurrence(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(log_a),
+        chunk=4)
+    hstate = jnp.zeros((b, h, dk, dv + 1), jnp.float32)
+    outs = []
+    for t in range(s):
+        o, hstate = linear_recurrence_step(
+            jnp.asarray(q[:, t]), jnp.asarray(k[:, t]), jnp.asarray(v[:, t]),
+            jnp.asarray(log_a[:, t]), hstate)
+        outs.append(o)
+    got = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hstate), np.asarray(h_full),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,55 @@
+"""End-to-end behaviour: the paper's claims as executable assertions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse.random import banded_spd, powerlaw_graph
+from repro.core.tilefusion import build_schedule, to_device_schedule
+
+
+def test_claim_two_wavefronts_no_redundancy():
+    """Paper conclusion: 'The created schedule does not use redundant
+    computation and its synchronizations are always 2.'"""
+    for seed, gen in enumerate((banded_spd, powerlaw_graph)):
+        a = gen(512, 8, seed=seed)
+        s = build_schedule(a, b_col=32, c_col=32, p=4,
+                           cache_size=100_000.0, ct_size=128)
+        assert len(s.wavefronts) == 2
+        # no redundancy: every I iteration appears exactly once (validate()
+        # checks this); overlapped tiling would replicate
+        s.validate()
+
+
+def test_claim_spd_fuses_better_than_graphs():
+    """Paper §4.2.1: 'fused ratio in SPD matrices is on average 2x higher
+    than graph matrices.'"""
+    spd = banded_spd(2048, 8, seed=0)
+    graph = powerlaw_graph(2048, 8, seed=0)
+    kw = dict(b_col=64, c_col=64, p=8, cache_size=1e12, ct_size=512)
+    r_spd = build_schedule(spd, **kw).fused_ratio
+    r_graph = build_schedule(graph, **kw).fused_ratio
+    assert r_spd > r_graph
+
+
+def test_claim_traffic_saving_grows_with_fused_ratio():
+    """The locality mechanism: more fused iterations -> less D1 spill."""
+    a = banded_spd(1024, 4, seed=1)
+    kw = dict(b_col=32, c_col=32, p=4, cache_size=1e12)
+    savings = []
+    for ct in (16, 128, 1024):
+        s = build_schedule(a, ct_size=ct, **kw)
+        ds = to_device_schedule(a, s)
+        savings.append(ds.hbm_traffic_model(32, 32)["traffic_saving"])
+    assert savings[-1] >= savings[0]
+
+
+def test_scheduler_is_linear_ish():
+    """Complexity claim: scheduler is O(nnz log ct) — must handle a 50k-row
+    matrix in seconds."""
+    import time
+    a = banded_spd(50_000, 8, seed=2)
+    t0 = time.time()
+    s = build_schedule(a, b_col=64, c_col=64, p=16, cache_size=600_000.0,
+                       ct_size=2048)
+    assert time.time() - t0 < 30.0
+    s.validate()
