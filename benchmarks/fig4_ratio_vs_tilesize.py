@@ -8,7 +8,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.sparse.random import benchmark_suite
-from repro.core.tilefusion import build_schedule
+from repro.core.tilefusion import api
 
 
 def run():
@@ -19,8 +19,9 @@ def run():
         for name, a in suite.items():
             # p=1: measure the pure ratio-vs-tile-size curve (the paper's
             # Fig 4), not the scheduler's load-balance-clamped t
-            sched = build_schedule(a, b_col=64, c_col=64, p=1,
-                                   cache_size=1e12, ct_size=ct)
+            sched = api.get_schedule(a, b_col=64, c_col=64, p=1,
+                                     cache_size=1e12, ct_size=ct,
+                                     uniform_split=False).sched
             ratios.append(sched.fused_ratio)
         rows.append((f"fig4/fused_ratio/ct{ct}", 0.0,
                      f"mean_fused_ratio={np.mean(ratios):.3f}"))

@@ -10,12 +10,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse.random import powerlaw_graph, banded_spd
-from repro.core.tilefusion import build_schedule, to_device_schedule, fused_ops
+from repro.core.tilefusion import api, fused_ops
 
 from .util import gmean, time_fn
 
 N = 2048
 P = 8
+KNOBS = dict(p=P, cache_size=300_000.0, ct_size=512, uniform_split=False)
 
 
 def run():
@@ -28,10 +29,7 @@ def run():
     for name, a in mats.items():
         b = jnp.asarray(rng.standard_normal((N, bcol)), jnp.float32)
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
-        sched = build_schedule(a, b_col=bcol, c_col=bcol, p=P,
-                               cache_size=300_000.0, ct_size=512)
-        ds = to_device_schedule(a, sched)
-        t_f = time_fn(fused_ops.fused_gemm_spmm, ds, b, c)
+        t_f = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", **KNOBS)
 
         parts = fused_ops.overlapped_tiles(a, P)
         t_ov = time_fn(fused_ops.overlapped_gemm_spmm, a, parts, b, c)

@@ -10,11 +10,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse.random import benchmark_suite
-from repro.core.tilefusion import build_schedule, to_device_schedule, fused_ops
+from repro.core.tilefusion import api
 
 from .util import gmean, time_fn
 
 N = 2048
+# step 1 only = cache_size=∞ disables splitting; step 1+2 adds the cost
+# model.  Both are just cache-budget knobs on the unified API.
+K1 = dict(p=8, cache_size=1e12, ct_size=512, uniform_split=False)
+K12 = dict(p=8, cache_size=150_000.0, ct_size=512, uniform_split=False)
 
 
 def run():
@@ -25,12 +29,10 @@ def run():
     for name, a in benchmark_suite(N).items():
         b = jnp.asarray(rng.standard_normal((N, bcol)), jnp.float32)
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
-        s1 = build_schedule(a, b_col=bcol, c_col=bcol, p=8,
-                            cache_size=1e12, ct_size=512)   # step 1 only
-        s12 = build_schedule(a, b_col=bcol, c_col=bcol, p=8,
-                             cache_size=150_000.0, ct_size=512)
-        t1 = time_fn(fused_ops.fused_gemm_spmm, to_device_schedule(a, s1), b, c)
-        t12 = time_fn(fused_ops.fused_gemm_spmm, to_device_schedule(a, s12), b, c)
+        s1 = api.get_schedule(a, b_col=bcol, c_col=bcol, **K1).sched
+        s12 = api.get_schedule(a, b_col=bcol, c_col=bcol, **K12).sched
+        t1 = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", **K1)
+        t12 = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", **K12)
         sp2.append(t1 / t12)
         rows.append((f"fig9/{name}/step1", t1,
                      f"step12_us={t12:.0f};step2_speedup={t1/t12:.2f};"

@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sparse.random import banded_spd
+from repro.core.tilefusion import api, fused_ref
 from repro.kernels import ops, ref
 
 from .util import time_fn
@@ -39,18 +41,24 @@ def run():
                         - ref.attention(q, k, v)).max())
     rows.append(("kernels/flash_attention/pallas_interp", t_k,
                  f"ref_us={t_r:.0f};max_err={err:.2e}"))
-    # tile-fused GeMM-SpMM wavefront 0
-    T, t, j0, w, bcol, ccol = 8, 256, 32, 8, 64, 64
-    cols0 = jnp.asarray(rng.integers(0, t, (T, j0, w)), jnp.int32)
-    vals0 = jnp.asarray(rng.standard_normal((T, j0, w)), jnp.float32)
-    bb = jnp.asarray(rng.standard_normal((T * t, bcol)), jnp.float32)
-    cc = jnp.asarray(rng.standard_normal((bcol, ccol)), jnp.float32)
-    t_k = time_fn(ops.tile_fused_gemm_spmm_wf0, cols0, vals0, bb, cc, t=t)
-    d1k, rk = ops.tile_fused_gemm_spmm_wf0(cols0, vals0, bb, cc, t=t)
-    d1r, rr = ref.tile_fused_gemm_spmm_wf0(cols0, vals0, bb, cc, t=t)
-    err = float(max(jnp.abs(d1k - d1r).max(), jnp.abs(rk - rr).max()))
-    rows.append(("kernels/tile_fused_gemm_spmm/pallas_interp", t_k,
-                 f"max_err={err:.2e};vmem_tile_t={ops.choose_kernel_tile(bcol, ccol, j0, w)}"))
+    # tile-fused GeMM-SpMM through the dispatch API: every backend on one
+    # real schedule (pallas = wavefront-0 kernel, interpret mode on CPU)
+    bcol = 64
+    a = banded_spd(2048, 8, seed=9)
+    knobs = dict(p=8, cache_size=300_000.0, ct_size=512)
+    bb = jnp.asarray(rng.standard_normal((2048, bcol)), jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
+    want = fused_ref.unfused_gemm_spmm(a, np.asarray(bb, np.float64),
+                                       np.asarray(cc, np.float64))
+    ds = api.get_schedule(a, b_col=bcol, c_col=bcol, **knobs).dsched
+    j0, w = ds.ell_cols0.shape[1], ds.ell_cols0.shape[2]
+    for be in ("pallas", "xla", "unfused"):
+        t_k = time_fn(api.tile_fused_matmul, a, bb, cc, backend=be, **knobs)
+        err = float(np.abs(np.asarray(
+            api.tile_fused_matmul(a, bb, cc, backend=be, **knobs)) - want).max())
+        rows.append((f"kernels/tile_fused_gemm_spmm/{be}", t_k,
+                     f"max_err={err:.2e};"
+                     f"vmem_tile_t={ops.choose_kernel_tile(bcol, bcol, j0, w)}"))
     # moe
     e, cap = 8, 256
     xm = jnp.asarray(rng.standard_normal((e, cap, d)), jnp.float32)

@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.sparse.random import powerlaw_graph, block_diag_noise
-from repro.core.tilefusion import build_schedule
+from repro.core.tilefusion import api
 from repro.core.tilefusion.reorder import bandwidth, permute_csr, rcm_order
 
 
@@ -22,12 +22,13 @@ def run():
             block_diag_noise(4096, 512, seed=13),
             np.random.default_rng(0).permutation(4096)),
     }
-    kw = dict(b_col=64, c_col=64, p=8, cache_size=1e12, ct_size=512)
+    kw = dict(b_col=64, c_col=64, p=8, cache_size=1e12, ct_size=512,
+              uniform_split=False)
     for name, a in mats.items():
-        r0 = build_schedule(a, **kw).fused_ratio
+        r0 = api.get_schedule(a, **kw).sched.fused_ratio
         perm = rcm_order(a)
         a2 = permute_csr(a, perm)
-        r1 = build_schedule(a2, **kw).fused_ratio
+        r1 = api.get_schedule(a2, **kw).sched.fused_ratio
         rows.append((f"reorder/{name}", 0.0,
                      f"ratio_before={r0:.3f};ratio_after={r1:.3f};"
                      f"bw_before={bandwidth(a)};bw_after={bandwidth(a2)}"))

@@ -16,13 +16,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse.random import benchmark_suite
-from repro.core.tilefusion import build_schedule, to_device_schedule, fused_ops
+from repro.core.tilefusion import api
 
 from .util import gmean, time_fn
 
 N = 2048
 P = 8
 CACHE = 300_000.0
+KNOBS = dict(p=P, cache_size=CACHE, ct_size=512)
 
 
 def run():
@@ -34,14 +35,13 @@ def run():
         for name, a in suite.items():
             b = jnp.asarray(rng.standard_normal((N, bcol)), jnp.float32)
             c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
-            sched = build_schedule(a, b_col=bcol, c_col=bcol, p=P,
-                                   cache_size=CACHE, ct_size=512,
-                                   uniform_split=True)
-            ds = to_device_schedule(a, sched)
-            ell = fused_ops.csr_to_ell(a)
-            t_f = time_fn(fused_ops.fused_gemm_spmm, ds, b, c)
-            t_u = time_fn(fused_ops.unfused_gemm_spmm, *ell, b, c)
-            tm = ds.hbm_traffic_model(bcol, bcol)
+            entry = api.get_schedule(a, b_col=bcol, c_col=bcol, **KNOBS)
+            sched = entry.sched
+            t_f = time_fn(api.tile_fused_matmul, a, b, c, backend="xla",
+                          **KNOBS)
+            t_u = time_fn(api.tile_fused_matmul, a, b, c, backend="unfused",
+                          **KNOBS)
+            tm = entry.traffic_model
             speedups[name] = t_u / t_f
             savings[name] = tm["traffic_saving"]
             rows.append((

@@ -9,13 +9,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sparse.random import benchmark_suite
-from repro.core.tilefusion import build_schedule, to_device_schedule, fused_ops
+from repro.core.tilefusion import api
 
 from .util import gmean, time_fn
 
 N = 2048
 P = 8
 CACHE = 300_000.0
+KNOBS = dict(p=P, cache_size=CACHE, ct_size=512)
 
 
 def run():
@@ -26,15 +27,14 @@ def run():
         speedups, savings = {}, {}
         for name, a in suite.items():
             c = jnp.asarray(rng.standard_normal((N, ccol)), jnp.float32)
-            sched = build_schedule(a, b_col=ccol, c_col=ccol, p=P,
-                                   cache_size=CACHE, ct_size=512,
-                                   b_is_sparse=True, uniform_split=True)
-            ds = to_device_schedule(a, sched)
-            ell = fused_ops.csr_to_ell(a)
-            t_f = time_fn(fused_ops.fused_spmm_spmm, ds, a, c)
-            t_u = time_fn(fused_ops.unfused_spmm_spmm,
-                          ell[0], ell[1], ell[0], ell[1], c)
-            tm = ds.hbm_traffic_model(ccol, ccol)
+            entry = api.get_schedule(a, b_col=ccol, c_col=ccol,
+                                     b_is_sparse=True, **KNOBS)
+            sched = entry.sched
+            t_f = time_fn(api.tile_fused_matmul, a, a, c, backend="xla",
+                          **KNOBS)
+            t_u = time_fn(api.tile_fused_matmul, a, a, c, backend="unfused",
+                          **KNOBS)
+            tm = entry.traffic_model
             speedups[name] = t_u / t_f
             savings[name] = tm["traffic_saving"]
             rows.append((

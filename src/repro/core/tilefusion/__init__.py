@@ -1,13 +1,21 @@
-"""Tile fusion — the paper's contribution as a composable JAX module."""
+"""Tile fusion — the paper's contribution as a composable JAX module.
+
+``api.tile_fused_matmul`` is the one fused-matmul entrypoint (inspector
+cache + backend dispatch); the submodules below are its building blocks.
+"""
 from .cost_model import (DEFAULT_CPU_CACHE_BYTES, DEFAULT_VMEM_BUDGET_BYTES,
                          tile_cost_bytes, tile_cost_elements)
 from .scheduler import Schedule, Tile, build_schedule, fused_compute_ratio
 from .schedule import DeviceSchedule, to_device_schedule
-from . import fused_ops, fused_ref
+from . import api, fused_ops, fused_ref
+from .api import (clear_schedule_cache, get_schedule, schedule_cache_stats,
+                  select_backend, tile_fused_matmul)
 
 __all__ = [
     "Schedule", "Tile", "build_schedule", "fused_compute_ratio",
-    "DeviceSchedule", "to_device_schedule", "fused_ops", "fused_ref",
+    "DeviceSchedule", "to_device_schedule", "api", "fused_ops", "fused_ref",
+    "tile_fused_matmul", "get_schedule", "select_backend",
+    "clear_schedule_cache", "schedule_cache_stats",
     "tile_cost_bytes", "tile_cost_elements",
     "DEFAULT_CPU_CACHE_BYTES", "DEFAULT_VMEM_BUDGET_BYTES",
 ]

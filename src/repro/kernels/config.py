@@ -1,0 +1,28 @@
+"""Single place the Pallas kernels resolve their ``interpret`` default.
+
+Compiled Pallas lowering exists for TPU (Mosaic); on the CPU backend the
+kernels run in interpret mode (kernel body executed as XLA ops — same
+numerics, same blocking).  Kernels take ``interpret=None`` and resolve it
+here so a real backend never silently falls into interpret mode.
+
+``PALLAS_INTERPRET=0/1`` force-overrides in either direction (used by the
+kernel tests to pin a mode regardless of backend).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("PALLAS_INTERPRET")
+    if env is not None:
+        return env == "1"
+    # only TPU has a compiled (Mosaic) lowering for these kernels; CPU *and*
+    # GPU interpret (the kernels use pltpu scratch shapes — no Triton path)
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .config import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -63,19 +65,27 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "block_q", "block_k", "causal", "window", "sm_scale", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     *, block_q: int = 128, block_k: int = 128,
                     causal: bool = True, window: int = 0,
                     sm_scale: float | None = None,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q: (B, H, Sq, D); k, v: (B, H, Sk, D) -> (B, H, Sq, D).
 
     ``window > 0`` = sliding-window (block-sparse) attention; kv blocks fully
     outside the window are masked (a production TPU kernel would skip them —
     the FLOP saving is accounted in the roofline as block-sparsity).
     """
+    # resolve outside the jit so PALLAS_INTERPRET changes apply per call
+    return _flash_attention(q, k, v, block_q=block_q, block_k=block_k,
+                            causal=causal, window=window, sm_scale=sm_scale,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_k", "causal", "window", "sm_scale", "interpret"))
+def _flash_attention(q, k, v, *, block_q, block_k, causal, window, sm_scale,
+                     interpret):
     b, h, sq, d = q.shape
     sk = k.shape[2]
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _kernel(x_ref, w1_ref, w2_ref, out_ref, *, act: str):
     f = pl.program_id(1)
@@ -37,12 +39,19 @@ def _kernel(x_ref, w1_ref, w2_ref, out_ref, *, act: str):
         out_ref[...] = (out_ref[...] + part).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_m", "block_f", "act", "interpret"))
 def fused_ffn(x: jax.Array, w1: jax.Array, w2: jax.Array,
               *, block_m: int = 256, block_f: int = 512,
-              act: str = "gelu", interpret: bool = True) -> jax.Array:
+              act: str = "gelu", interpret: bool | None = None) -> jax.Array:
     """x: (m, d), w1: (d, f), w2: (f, d) -> (m, d)."""
+    # resolve outside the jit so PALLAS_INTERPRET changes apply per call,
+    # not per trace
+    return _fused_ffn(x, w1, w2, block_m=block_m, block_f=block_f, act=act,
+                      interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_f", "act", "interpret"))
+def _fused_ffn(x, w1, w2, *, block_m, block_f, act, interpret):
     m, d = x.shape
     f = w1.shape[1]
     assert m % block_m == 0 and f % block_f == 0, (m, f, block_m, block_f)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _kernel(x_ref, w1_ref, w2_ref, out_ref, *, act: str):
     f = pl.program_id(2)
@@ -37,12 +39,18 @@ def _kernel(x_ref, w1_ref, w2_ref, out_ref, *, act: str):
         out_ref[0] = (out_ref[0] + part).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_c", "block_f", "act", "interpret"))
 def fused_moe_ffn(x: jax.Array, w1: jax.Array, w2: jax.Array,
                   *, block_c: int = 128, block_f: int = 512,
-                  act: str = "silu", interpret: bool = True) -> jax.Array:
+                  act: str = "silu", interpret: bool | None = None) -> jax.Array:
     """x: (E, cap, d); w1: (E, d, f); w2: (E, f, d) -> (E, cap, d)."""
+    # resolve outside the jit so PALLAS_INTERPRET changes apply per call
+    return _fused_moe_ffn(x, w1, w2, block_c=block_c, block_f=block_f,
+                          act=act, interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_c", "block_f", "act", "interpret"))
+def _fused_moe_ffn(x, w1, w2, *, block_c, block_f, act, interpret):
     e, cap, d = x.shape
     f = w1.shape[2]
     assert cap % block_c == 0 and f % block_f == 0, (cap, f, block_c, block_f)

@@ -1,20 +1,17 @@
 """Public jit'd entry points for the Pallas kernels.
 
-Dispatch policy: on TPU the kernels run compiled (interpret=False); on this
-CPU container they run in interpret mode (kernel body executed as XLA ops) —
-same numerics, same blocking.  ``PALLAS_INTERPRET`` can force either.
+Dispatch policy: on TPU the kernels run compiled (interpret=False); on the
+CPU backend they run in interpret mode (kernel body executed as XLA ops) —
+same numerics, same blocking.  The choice is made once, in
+``config.default_interpret`` (``PALLAS_INTERPRET`` can force either).
 Each op also exposes an ``impl="xla"`` escape hatch used by the dry-run
 (representative HLO without a TPU custom-call) and by sizes whose working set
 exceeds the VMEM budget.
 """
 from __future__ import annotations
 
-import os
-
-import jax
-import numpy as np
-
 from . import ref
+from .config import default_interpret as _interpret
 from .fused_ffn import fused_ffn as _fused_ffn_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .moe import fused_moe_ffn as _moe_pallas
@@ -23,13 +20,6 @@ from .tile_fused_gemm_spmm import tile_fused_gemm_spmm_wf0 as _tf_pallas
 
 #: VMEM budget used by choose_kernel_tile (bytes); ~half of v5e VMEM.
 VMEM_BUDGET = 64 * 1024 * 1024
-
-
-def _interpret() -> bool:
-    env = os.environ.get("PALLAS_INTERPRET")
-    if env is not None:
-        return env == "1"
-    return jax.default_backend() != "tpu"
 
 
 def choose_kernel_tile(b_col: int, c_col: int, j0_max: int, w: int,
@@ -61,7 +51,7 @@ def tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, *, t: int,
 
 
 def spmm_ell(cols, vals, x, *, block_rows: int = 256, impl: str = "pallas"):
-    if impl == "xla" or cols.shape[0] % block_rows != 0:
+    if impl == "xla":
         return ref.spmm_ell(cols, vals, x)
     return _spmm_pallas(cols, vals, x, block_rows=block_rows,
                         interpret=_interpret())

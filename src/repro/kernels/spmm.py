@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _kernel(cols_ref, vals_ref, x_ref, out_ref, *, n_rows_x: int):
     cols = cols_ref[...]                                   # (bm, w)
@@ -35,14 +37,18 @@ def _kernel(cols_ref, vals_ref, x_ref, out_ref, *, n_rows_x: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def spmm_ell(cols: jax.Array, vals: jax.Array, x: jax.Array,
-             *, block_rows: int = 256, interpret: bool = True) -> jax.Array:
-    """ELL SpMM.  cols/vals: (n_rows, w); x: (n, c).  n_rows % block_rows == 0."""
+def _spmm_ell(cols: jax.Array, vals: jax.Array, x: jax.Array,
+              *, block_rows: int, interpret: bool) -> jax.Array:
     n_rows, w = cols.shape
     n, c = x.shape
-    assert n_rows % block_rows == 0, (n_rows, block_rows)
-    grid = (n_rows // block_rows,)
-    return pl.pallas_call(
+    # rows that don't fill the last block are padded with col=0/val=0 slots
+    # (contribute nothing) and sliced off the output
+    pad = -n_rows % block_rows
+    if pad:
+        cols = jnp.pad(cols, ((0, pad), (0, 0)))
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+    grid = ((n_rows + pad) // block_rows,)
+    out = pl.pallas_call(
         functools.partial(_kernel, n_rows_x=n),
         grid=grid,
         in_specs=[
@@ -51,6 +57,16 @@ def spmm_ell(cols: jax.Array, vals: jax.Array, x: jax.Array,
             pl.BlockSpec((n, c), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_rows, c), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_rows + pad, c), x.dtype),
         interpret=interpret,
     )(cols, vals, x)
+    return out[:n_rows] if pad else out
+
+
+def spmm_ell(cols: jax.Array, vals: jax.Array, x: jax.Array,
+             *, block_rows: int = 256,
+             interpret: bool | None = None) -> jax.Array:
+    """ELL SpMM.  cols/vals: (n_rows, w); x: (n, c).  Any n_rows (padded to a
+    block_rows multiple internally)."""
+    return _spmm_ell(cols, vals, x, block_rows=block_rows,
+                     interpret=resolve_interpret(interpret))

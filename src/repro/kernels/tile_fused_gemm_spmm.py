@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .config import resolve_interpret
+
 
 def _kernel(cols_ref, vals_ref, b_ref, c_ref, d1_ref, rows_ref):
     # ---- GeMM part: D1 tile, stays in VMEM ----
@@ -55,10 +57,9 @@ def _kernel(cols_ref, vals_ref, b_ref, c_ref, d1_ref, rows_ref):
     rows_ref[0] = rows.astype(rows_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("t", "interpret"))
 def tile_fused_gemm_spmm_wf0(cols0: jax.Array, vals0: jax.Array,
                              b: jax.Array, c: jax.Array,
-                             *, t: int, interpret: bool = True):
+                             *, t: int, interpret: bool | None = None):
     """Run wavefront 0.
 
     Args:
@@ -71,6 +72,12 @@ def tile_fused_gemm_spmm_wf0(cols0: jax.Array, vals0: jax.Array,
       d1: (T0*t, cCol) intermediate, rows0: (T0, j0_max, cCol) fused rows
       (caller scatters rows0 to D via the schedule's j_rows0).
     """
+    return _tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, t=t,
+                                     interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def _tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, *, t: int, interpret: bool):
     n_tiles, j0_max, w = cols0.shape
     b_col, c_col = c.shape
     assert b.shape[0] == n_tiles * t, (b.shape, n_tiles, t)

@@ -83,6 +83,23 @@ def _compile(arch: str, shape_name: str, mesh, *, unroll: bool,
     }
 
 
+def _peak_bytes(mem):
+    """Per-device peak memory.  ``CompiledMemoryStats.peak_memory_in_bytes``
+    only exists on newer jaxlib / TPU runtimes; the CPU/host backend exposes
+    just the component sizes, so derive the peak from those instead of
+    silently reporting None."""
+    if mem is None:
+        return None
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak:
+        return int(peak)
+    parts = ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes")
+    total = sum(int(getattr(mem, k, 0) or 0) for k in parts)
+    total -= int(getattr(mem, "alias_size_in_bytes", 0) or 0)
+    return max(total, 0)
+
+
 def _depth_points(cfg):
     """Two shallow depths for the affine-in-depth extrapolation."""
     if cfg.block_pattern == "mlstm7+slstm":
@@ -113,7 +130,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
             "output_bytes": getattr(mem, "output_size_in_bytes", None),
             "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "peak_bytes": _peak_bytes(mem),
         },
     }
 

@@ -15,6 +15,21 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Compat shim: ``jax.shard_map`` graduated from
+    ``jax.experimental.shard_map`` (and renamed ``check_rep`` →
+    ``check_vma``) only in newer JAX; resolve whichever this install has.
+    All shard_map'd layers go through here.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as experimental_sm
+    return experimental_sm(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=check_vma)
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardingRules:
     """Logical-axis assignment.  ``batch_axes`` composes ("pod","data")."""

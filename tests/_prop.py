@@ -1,0 +1,77 @@
+"""Property-test shim: real hypothesis when installed, seeded sweeps otherwise.
+
+The tier-1 suite must collect and run on machines without ``hypothesis``.
+When it is missing, ``@given(x=st.integers(...))`` degrades to a
+deterministic ``pytest.mark.parametrize`` sweep: ``max_examples`` cases are
+drawn up front from a fixed seed, so every environment runs the same cases
+and failures reproduce by test id.  Only the strategy subset this repo uses
+is implemented (integers, floats, sampled_from, booleans), keyword-argument
+``@given`` only.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+    import pytest
+
+    _DEFAULT_EXAMPLES = 10
+    _SEED = 0x7E57_5EED
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda r: int(r.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda r: float(r.uniform(lo, hi)))
+
+        @staticmethod
+        def sampled_from(xs):
+            xs = list(xs)
+            return _Strategy(lambda r: xs[int(r.integers(len(xs)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.integers(2)))
+
+    st = _Strategies()
+
+    def _parametrize(fn, strats, n):
+        names = list(strats)
+        cases = []
+        for i in range(n):
+            rng = np.random.default_rng(_SEED + 7919 * i)
+            drawn = tuple(strats[k].draw(rng) for k in names)
+            # pytest does not unpack 1-tuples for a single argname
+            cases.append(drawn if len(names) > 1 else drawn[0])
+        return pytest.mark.parametrize(",".join(names), cases)(fn)
+
+    def given(**strats):
+        def deco(fn):
+            out = _parametrize(fn, strats, _DEFAULT_EXAMPLES)
+            out._given_strats = strats
+            return out
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+        """Applied above @given in this repo; re-draws the sweep at the
+        requested size (dropping the default-sized parametrization)."""
+        def deco(fn):
+            strats = getattr(fn, "_given_strats", None)
+            if strats is None:
+                return fn
+            fn.pytestmark = [m for m in getattr(fn, "pytestmark", [])
+                             if m.name != "parametrize"]
+            return _parametrize(fn, strats, max_examples)
+        return deco

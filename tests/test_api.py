@@ -1,0 +1,113 @@
+"""Unified dispatch API: inspector cache, backend overrides, cost model."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparse.formats import CSR
+from repro.core.sparse.random import banded_spd, powerlaw_graph
+from repro.core.tilefusion import api, fused_ref
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    api.clear_schedule_cache()
+    yield
+    api.clear_schedule_cache()
+
+
+def test_cache_hit_identical_pattern_builds_once():
+    a = banded_spd(256, 4, seed=0)
+    e1 = api.get_schedule(a, b_col=16, c_col=16)
+    assert api.schedule_cache_stats() == {"hits": 0, "misses": 1,
+                                          "entries": 1}
+    e2 = api.get_schedule(a, b_col=16, c_col=16)
+    assert e2 is e1                       # schedule built exactly once
+    assert api.schedule_cache_stats()["hits"] == 1
+    # same content in a fresh CSR object still hits (content-keyed)
+    a_copy = CSR(a.n_rows, a.n_cols, a.indptr.copy(), a.indices.copy(),
+                 a.data.copy())
+    assert api.get_schedule(a_copy, b_col=16, c_col=16) is e1
+    # a different cache budget is a different schedule
+    api.get_schedule(a, b_col=16, c_col=16, cache_size=5_000.0)
+    assert api.schedule_cache_stats()["misses"] == 2
+
+
+def test_cache_distinguishes_values_same_pattern():
+    a = banded_spd(128, 4, seed=1)
+    e1 = api.get_schedule(a, b_col=8, c_col=8)
+    a_scaled = CSR(a.n_rows, a.n_cols, a.indptr, a.indices, a.data * 2.0)
+    e2 = api.get_schedule(a_scaled, b_col=8, c_col=8)
+    assert e2 is not e1                   # DeviceSchedule bakes in values
+
+
+def test_matmul_calls_amortize_inspection():
+    a = powerlaw_graph(256, 5, seed=3)
+    b = jnp.ones((256, 8), jnp.float32)
+    c = jnp.ones((8, 8), jnp.float32)
+    for _ in range(4):
+        api.tile_fused_matmul(a, b, c, backend="xla")
+    stats = api.schedule_cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 3
+
+
+def test_backend_overrides_agree_gemm_spmm():
+    a = banded_spd(512, 6, seed=1)
+    rng = np.random.default_rng(1)
+    b = rng.standard_normal((512, 32))
+    c = rng.standard_normal((32, 16))
+    want = fused_ref.unfused_gemm_spmm(a, b, c)
+    bj = jnp.asarray(b, jnp.float32)
+    cj = jnp.asarray(c, jnp.float32)
+    for backend in api.BACKENDS:
+        got = api.tile_fused_matmul(a, bj, cj, backend=backend,
+                                    cache_size=50_000.0, ct_size=128)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3,
+                                   atol=2e-3, err_msg=backend)
+
+
+def test_backend_overrides_agree_spmm_spmm():
+    a = powerlaw_graph(256, 5, seed=2)
+    rng = np.random.default_rng(2)
+    c = rng.standard_normal((256, 8))
+    want = fused_ref.unfused_spmm_spmm(a, a, c)
+    cj = jnp.asarray(c, jnp.float32)
+    for backend in ("auto", "xla", "unfused"):
+        got = api.tile_fused_matmul(a, a, cj, backend=backend,
+                                    cache_size=20_000.0, ct_size=64)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3,
+                                   atol=2e-3, err_msg=backend)
+    with pytest.raises(ValueError):       # no Pallas SpMM-SpMM kernel yet
+        api.tile_fused_matmul(a, a, cj, backend="pallas")
+
+
+def test_cost_model_falls_back_to_unfused():
+    """Dense pattern + tiles far smaller than the row span: nothing fuses,
+    Eq-3 predicts zero traffic saving, dispatch must pick the unfused code."""
+    n = 96
+    rng = np.random.default_rng(3)
+    a = CSR.from_dense(rng.standard_normal((n, n)))
+    entry = api.get_schedule(a, b_col=8, c_col=8, ct_size=16, cache_size=1e12)
+    assert entry.sched.fused_ratio < api.MIN_FUSED_RATIO
+    assert api.select_backend(entry) == "unfused"
+    b = rng.standard_normal((n, 8))
+    c = rng.standard_normal((8, 8))
+    got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                                jnp.asarray(c, jnp.float32), backend="auto",
+                                ct_size=16, cache_size=1e12)
+    np.testing.assert_allclose(np.asarray(got),
+                               fused_ref.unfused_gemm_spmm(a, b, c),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_auto_selects_fused_on_friendly_pattern():
+    a = banded_spd(512, 4, seed=5)
+    entry = api.get_schedule(a, b_col=32, c_col=32, cache_size=100_000.0,
+                             ct_size=128)
+    assert api.select_backend(entry) in ("xla", "pallas")
+
+
+def test_invalid_backend_rejected():
+    a = banded_spd(64, 2, seed=4)
+    with pytest.raises(ValueError):
+        api.tile_fused_matmul(a, jnp.ones((64, 4)), jnp.ones((4, 4)),
+                              backend="mkl")

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.sparse.formats import CSR
 from repro.core.sparse.random import banded_spd, powerlaw_graph

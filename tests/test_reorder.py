@@ -1,6 +1,6 @@
 """RCM reordering: permutation identity + bandwidth reduction."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.sparse.formats import CSR
 from repro.core.sparse.random import banded_spd, powerlaw_graph

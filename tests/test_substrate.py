@@ -77,6 +77,7 @@ def test_checkpoint_prune(tmp_path):
     assert len([d for d in os.listdir(tmp_path) if d.startswith("step_")]) == 2
 
 
+@pytest.mark.slow
 def test_preemption_restart_exact_resume(tmp_path):
     """Kill at step 6, restart, final state equals uninterrupted run."""
     env = dict(os.environ, PYTHONPATH="src")
