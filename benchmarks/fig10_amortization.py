@@ -15,10 +15,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparse.random import benchmark_suite
 from repro.core.tilefusion import api
 
-from .util import time_fn
+from .util import bench_n, bench_suite, time_fn
 
 N = 2048
 KNOBS = dict(p=8, cache_size=300_000.0, ct_size=512, uniform_split=False)
@@ -28,9 +27,10 @@ def run():
     rows = []
     rng = np.random.default_rng(4)
     bcol = 64
-    for name, a in benchmark_suite(N).items():
+    n = bench_n(N)
+    for name, a in bench_suite(N).items():
         api.clear_schedule_cache()
-        b = jnp.asarray(rng.standard_normal((N, bcol)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
         # first inspection pays the scheduler; the repeat is a cache hit
         t0 = time.perf_counter()

@@ -5,14 +5,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.sparse.random import benchmark_suite
 from repro.core.tilefusion import fused_compute_ratio
+
+from .util import bench_suite
 
 
 def run():
     rows = []
     ratios = []
-    for name, a in benchmark_suite(4096).items():
+    for name, a in bench_suite(4096).items():
         r = fused_compute_ratio(a, ct_size=2048)
         ratios.append(r)
         rows.append((f"fig1/fused_compute_ratio/{name}", 0.0,

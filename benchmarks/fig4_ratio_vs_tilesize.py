@@ -7,14 +7,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.sparse.random import benchmark_suite
 from repro.core.tilefusion import api
+
+from .util import bench_suite, sweep
 
 
 def run():
     rows = []
-    suite = benchmark_suite(4096)
-    for ct in (64, 128, 256, 512, 1024, 2048, 4096):
+    suite = bench_suite(4096)
+    for ct in sweep((64, 128, 256, 512, 1024, 2048, 4096), (64, 256)):
         ratios = []
         for name, a in suite.items():
             # p=1: measure the pure ratio-vs-tile-size curve (the paper's

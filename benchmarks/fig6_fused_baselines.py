@@ -12,7 +12,7 @@ import numpy as np
 from repro.core.sparse.random import powerlaw_graph, banded_spd
 from repro.core.tilefusion import api, fused_ops
 
-from .util import gmean, time_fn
+from .util import bench_n, gmean, time_fn
 
 N = 2048
 P = 8
@@ -22,12 +22,13 @@ KNOBS = dict(p=P, cache_size=300_000.0, ct_size=512, uniform_split=False)
 def run():
     rows = []
     rng = np.random.default_rng(2)
-    mats = {"powerlaw_d8": powerlaw_graph(N, 8, seed=7),
-            "banded_b8": banded_spd(N, 8, seed=8)}
+    n = bench_n(N)
+    mats = {"powerlaw_d8": powerlaw_graph(n, 8, seed=7),
+            "banded_b8": banded_spd(n, 8, seed=8)}
     bcol = 64
     sp_at, sp_ov = [], []
     for name, a in mats.items():
-        b = jnp.asarray(rng.standard_normal((N, bcol)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
         t_f = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", **KNOBS)
 

@@ -9,10 +9,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparse.random import benchmark_suite
 from repro.core.tilefusion import api
 
-from .util import gmean, time_fn
+from .util import bench_n, bench_suite, gmean, time_fn
 
 N = 2048
 # step 1 only = cache_size=∞ disables splitting; step 1+2 adds the cost
@@ -26,8 +25,9 @@ def run():
     rng = np.random.default_rng(3)
     bcol = 64
     sp2 = []
-    for name, a in benchmark_suite(N).items():
-        b = jnp.asarray(rng.standard_normal((N, bcol)), jnp.float32)
+    n = bench_n(N)
+    for name, a in bench_suite(N).items():
+        b = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
         s1 = api.get_schedule(a, b_col=bcol, c_col=bcol, **K1).sched
         s12 = api.get_schedule(a, b_col=bcol, c_col=bcol, **K12).sched

@@ -1,0 +1,75 @@
+"""Inspector cost: vectorized O(nnz) pipeline vs the loop-based reference.
+
+The §4.2.3 amortization argument needs a cheap inspector; this driver
+measures how cheap.  For each ≥50k-row synthetic pattern it times
+
+  * the retained row-at-a-time reference (``core.tilefusion.reference``) —
+    the pre-vectorization Algorithm 1 + nested-loop ELL packing, and
+  * the production vectorized inspector (``build_schedule`` +
+    ``to_device_schedule``),
+
+and derives the break-even executor step count for both from the Eq-3
+traffic model (bytes saved per run at v5e HBM bandwidth, as in fig10).
+It also times one full ``autotune=True`` sweep, whose affordability is the
+point of the rewrite: sweep cost ≈ grid size × one vectorized inspection.
+
+Target (ISSUE 2 acceptance): ≥ 10× inspector speedup on at least one
+≥50k-row pattern.  The power-law graph is reported too but is not the
+headline: its single max-degree hub row forces a (tiles, rows, width)
+padded ELL in the GB range, and that allocation — a property of the ELL
+format, paid identically by both packers — floors the ratio.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.sparse.random import banded_spd, block_diag_noise, \
+    powerlaw_graph
+from repro.core.tilefusion import api, build_schedule, reference, \
+    to_device_schedule
+
+from .util import bench_n
+
+N_FULL = 65_536          # ≥ 50k rows (GNN-scale)
+BCOL = 64
+KNOBS = dict(p=8, cache_size=300_000.0, ct_size=2048, uniform_split=True)
+HBM_BYTES_PER_S = 819e9  # v5e
+
+
+def _time_once(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run():
+    rows = []
+    n = bench_n(N_FULL, smoke_n=2048)
+    mats = {
+        "banded_spd_b8": banded_spd(n, 8, seed=6),
+        "blockdiag_512": block_diag_noise(n, 512, seed=7),
+        "powerlaw_d8": powerlaw_graph(n, 8, seed=8),
+    }
+    for name, a in mats.items():
+        t_vec = _time_once(lambda: to_device_schedule(
+            a, build_schedule(a, b_col=BCOL, c_col=BCOL, **KNOBS)))
+        t_ref = _time_once(lambda: reference.to_device_schedule_ref(
+            a, reference.build_schedule_ref(a, b_col=BCOL, c_col=BCOL,
+                                            **KNOBS)))
+        api.clear_schedule_cache()
+        entry = api.get_schedule(a, b_col=BCOL, c_col=BCOL, **KNOBS)
+        tm = entry.traffic_model
+        gain_s = (tm["unfused_bytes"] - tm["fused_bytes"]) / HBM_BYTES_PER_S
+        breakeven = lambda t: f"{t / gain_s:.0f}" if gain_s > 0 else "inf"
+        t0 = time.perf_counter()
+        at = api.get_schedule(a, b_col=BCOL, c_col=BCOL, autotune=True,
+                              **KNOBS)
+        t_sweep = time.perf_counter() - t0
+        rows.append((
+            f"inspector/{name}/n{n}", t_vec * 1e6,
+            f"ref_us={t_ref * 1e6:.0f};speedup={t_ref / t_vec:.1f}x;"
+            f"breakeven_steps_ref={breakeven(t_ref)};"
+            f"breakeven_steps_vec={breakeven(t_vec)};"
+            f"autotune_sweep_us={t_sweep * 1e6:.0f};"
+            f"autotune_pick={at.autotuned}"))
+    return rows

@@ -14,14 +14,14 @@ from repro.core.sparse.random import banded_spd
 from repro.core.tilefusion import api, fused_ref
 from repro.kernels import ops, ref
 
-from .util import time_fn
+from .util import bench_n, time_fn
 
 
 def run():
     rows = []
     rng = np.random.default_rng(5)
-    # fused FFN
-    m, d, f = 512, 256, 1024
+    # fused FFN (smoke shrinks rows/seq/capacity; block shapes still divide)
+    m, d, f = bench_n(512, 256), bench_n(256, 64), bench_n(1024, 512)
     x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
     w1 = jnp.asarray(rng.standard_normal((d, f)) * 0.05, jnp.float32)
     w2 = jnp.asarray(rng.standard_normal((f, d)) * 0.05, jnp.float32)
@@ -31,7 +31,7 @@ def run():
     rows.append(("kernels/fused_ffn/pallas_interp", t_k,
                  f"ref_us={t_r:.0f};max_err={err:.2e}"))
     # flash attention
-    b, h, s, dh = 1, 4, 512, 64
+    b, h, s, dh = 1, bench_n(4, 2), bench_n(512, 128), 64
     q = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((b, h, s, dh)), jnp.float32)
@@ -44,9 +44,10 @@ def run():
     # tile-fused GeMM-SpMM through the dispatch API: every backend on one
     # real schedule (pallas = wavefront-0 kernel, interpret mode on CPU)
     bcol = 64
-    a = banded_spd(2048, 8, seed=9)
+    n = bench_n(2048)
+    a = banded_spd(n, 8, seed=9)
     knobs = dict(p=8, cache_size=300_000.0, ct_size=512)
-    bb = jnp.asarray(rng.standard_normal((2048, bcol)), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
     cc = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
     want = fused_ref.unfused_gemm_spmm(a, np.asarray(bb, np.float64),
                                        np.asarray(cc, np.float64))
@@ -60,7 +61,7 @@ def run():
                      f"max_err={err:.2e};"
                      f"vmem_tile_t={ops.choose_kernel_tile(bcol, bcol, j0, w)}"))
     # moe
-    e, cap = 8, 256
+    e, cap = bench_n(8, 2), bench_n(256, 128)
     xm = jnp.asarray(rng.standard_normal((e, cap, d)), jnp.float32)
     w1m = jnp.asarray(rng.standard_normal((e, d, f)) * 0.05, jnp.float32)
     w2m = jnp.asarray(rng.standard_normal((e, f, d)) * 0.05, jnp.float32)

@@ -12,15 +12,18 @@ from repro.core.sparse.random import powerlaw_graph, block_diag_noise
 from repro.core.tilefusion import api
 from repro.core.tilefusion.reorder import bandwidth, permute_csr, rcm_order
 
+from .util import bench_n
+
 
 def run():
     rows = []
+    n = bench_n(4096)
     mats = {
-        "powerlaw_d4": powerlaw_graph(4096, 4, seed=11),
-        "powerlaw_d8": powerlaw_graph(4096, 8, seed=12),
+        "powerlaw_d4": powerlaw_graph(n, 4, seed=11),
+        "powerlaw_d8": powerlaw_graph(n, 8, seed=12),
         "blockdiag_shuffled": permute_csr(
-            block_diag_noise(4096, 512, seed=13),
-            np.random.default_rng(0).permutation(4096)),
+            block_diag_noise(n, min(512, n // 2), seed=13),
+            np.random.default_rng(0).permutation(n)),
     }
     kw = dict(b_col=64, c_col=64, p=8, cache_size=1e12, ct_size=512,
               uniform_split=False)

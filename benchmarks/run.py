@@ -1,6 +1,12 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+# ``--smoke`` runs every driver at one tiny problem size (sets
+# REPRO_BENCH_SMOKE=1 before the drivers import; see benchmarks/util.py) —
+# a bit-rot check, not a measurement.  The tier-1 suite invokes it via
+# tests/test_bench_smoke.py.
 from __future__ import annotations
 
+import os
 import sys
 import time
 
@@ -12,6 +18,7 @@ MODULES = [
     "fig6_fused_baselines",
     "fig9_step_ablation",
     "fig10_amortization",
+    "inspector_bench",
     "reorder_ablation",
     "kernels_bench",
 ]
@@ -19,7 +26,11 @@ MODULES = [
 
 def main() -> None:
     import importlib
-    only = sys.argv[1:] or None
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        args = [a for a in args if a != "--smoke"]
+    only = args or None
     print("name,us_per_call,derived")
     for mod_name in MODULES:
         if only and mod_name not in only:

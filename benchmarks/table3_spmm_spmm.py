@@ -8,10 +8,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sparse.random import benchmark_suite
 from repro.core.tilefusion import api
 
-from .util import gmean, time_fn
+from .util import bench_n, bench_suite, gmean, sweep, time_fn
 
 N = 2048
 P = 8
@@ -21,12 +20,13 @@ KNOBS = dict(p=P, cache_size=CACHE, ct_size=512)
 
 def run():
     rows = []
-    suite = benchmark_suite(N)
+    n = bench_n(N)
+    suite = bench_suite(N)
     rng = np.random.default_rng(1)
-    for ccol in (32, 64, 128):
+    for ccol in sweep((32, 64, 128), (32,)):
         speedups, savings = {}, {}
         for name, a in suite.items():
-            c = jnp.asarray(rng.standard_normal((N, ccol)), jnp.float32)
+            c = jnp.asarray(rng.standard_normal((n, ccol)), jnp.float32)
             entry = api.get_schedule(a, b_col=ccol, c_col=ccol,
                                      b_is_sparse=True, **KNOBS)
             sched = entry.sched

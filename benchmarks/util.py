@@ -1,14 +1,48 @@
-"""Benchmark helpers: timing + the shared matrix suite."""
+"""Benchmark helpers: timing, smoke-mode scaling, the shared matrix suite.
+
+Smoke mode (``REPRO_BENCH_SMOKE=1``, set by ``benchmarks/run.py --smoke``
+and the tier-1 bit-rot test) runs every driver end-to-end at one tiny
+problem size with minimal repetitions — the numbers are meaningless, the
+point is that the driver still executes.
+"""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import numpy as np
 
 
+def smoke() -> bool:
+    """True when benchmarks should run one tiny problem size."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def bench_n(full: int, smoke_n: int = 256) -> int:
+    """Problem size: ``full`` normally, ``smoke_n`` under --smoke."""
+    return smoke_n if smoke() else full
+
+
+def sweep(full, smoke_values):
+    """Parameter sweep: the full grid normally, a 1-point grid under --smoke."""
+    return smoke_values if smoke() else full
+
+
+def bench_suite(n: int, seed: int = 0):
+    """The shared matrix suite at ``bench_n(n)``; trimmed to two matrices
+    (one per paper group) under --smoke."""
+    from repro.core.sparse.random import benchmark_suite
+    suite = benchmark_suite(bench_n(n), seed=seed)
+    if smoke():
+        suite = {k: suite[k] for k in ("banded_spd_b4", "powerlaw_d4")}
+    return suite
+
+
 def time_fn(fn, *args, reps: int = 7, warmup: int = 2, **kw):
     """Median wall time in microseconds (paper uses median of 7 runs)."""
+    if smoke():
+        reps, warmup = 1, 1
     for _ in range(warmup):
         out = fn(*args, **kw)
         jax.block_until_ready(out)

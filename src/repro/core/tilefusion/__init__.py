@@ -4,7 +4,8 @@
 cache + backend dispatch); the submodules below are its building blocks.
 """
 from .cost_model import (DEFAULT_CPU_CACHE_BYTES, DEFAULT_VMEM_BUDGET_BYTES,
-                         tile_cost_bytes, tile_cost_elements)
+                         tile_cost_bytes, tile_cost_elements,
+                         tile_costs_batch)
 from .scheduler import Schedule, Tile, build_schedule, fused_compute_ratio
 from .schedule import DeviceSchedule, to_device_schedule
 from . import api, fused_ops, fused_ref
@@ -16,6 +17,6 @@ __all__ = [
     "DeviceSchedule", "to_device_schedule", "api", "fused_ops", "fused_ref",
     "tile_fused_matmul", "get_schedule", "select_backend",
     "clear_schedule_cache", "schedule_cache_stats",
-    "tile_cost_bytes", "tile_cost_elements",
+    "tile_cost_bytes", "tile_cost_elements", "tile_costs_batch",
     "DEFAULT_CPU_CACHE_BYTES", "DEFAULT_VMEM_BUDGET_BYTES",
 ]

@@ -18,14 +18,35 @@ owns the two decisions every call site used to repeat by hand:
      move more bytes fused than unfused) fall back to the unfused code.
      Benchmarks pass an explicit ``backend=`` override.
 
+**Tile-size autotuning (``autotune=True``).**  ``get_schedule`` /
+``tile_fused_matmul`` accept ``autotune=True`` to sweep a small
+``ct_size`` × ``cache_size`` grid (``AUTOTUNE_CT_GRID`` ×
+``AUTOTUNE_CACHE_SCALES``, plus the caller's own knobs) and keep the
+candidate whose Eq-3 predicted fast-memory traffic, scaled by the
+schedule's padded-FLOPs overhead, scores best.  The winner is pinned so it
+never predicts more traffic than the default ``ct_size=2048`` schedule, and
+the sweep result is
+memoized in the same content-keyed cache: one sweep per pattern, every
+later call is a hit.  The vectorized O(nnz) inspector is what makes the
+sweep affordable (candidate count × inspection cost).
+
+**Cache budget.**  Both the schedule cache and the full-matrix ELL cache
+are LRU-bounded at ``REPRO_SCHEDULE_CACHE_ENTRIES`` entries each (env var,
+default 128); streaming workloads that touch unbounded pattern sets evict
+oldest-first instead of growing without bound.
+``schedule_cache_stats()`` reports hits/misses/evictions plus live entry
+counts of both caches.
+
 Everything outside ``core/tilefusion`` (models, examples, benchmarks) routes
 through this module; later PRs extend the seam (sharded dispatch, GPU
-backend, autotuned tile size) without touching call sites.
+backend) without touching call sites.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
+import os
 import threading
 import time
 from typing import Tuple
@@ -47,6 +68,23 @@ BACKENDS = ("auto", "pallas", "xla", "unfused")
 #: the unfused baseline instead.
 MIN_FUSED_RATIO = 0.02
 
+#: The paper's ct_size heuristic (§4: ratio gains saturate past 2048); the
+#: autotune sweep is anchored on it — the winner never predicts more Eq-3
+#: traffic than this default.
+DEFAULT_CT_SIZE = 2048
+
+#: Coarse tile sizes the autotune sweep tries (the caller's ct_size and the
+#: 2048 anchor are always added).
+AUTOTUNE_CT_GRID = (512, 1024, 2048, 4096)
+
+#: Cache-budget scales the sweep tries per tile size: the full budget and a
+#: half budget (step 2 splits earlier, trading padding for locality).
+AUTOTUNE_CACHE_SCALES = (1.0, 0.5)
+
+#: Env var capping both the schedule cache and the ELL cache (entries).
+CACHE_ENTRIES_ENV = "REPRO_SCHEDULE_CACHE_ENTRIES"
+DEFAULT_CACHE_ENTRIES = 128
+
 
 # --------------------------------------------------------------------------
 # Inspector cache
@@ -55,9 +93,10 @@ MIN_FUSED_RATIO = 0.02
 class ScheduleEntry:
     """One memoized inspection: host schedule + device schedule + metadata.
 
-    Entries live for the process (the amortization contract: one pattern,
-    many runs).  Workloads that stream *new* patterns should call
-    ``clear_schedule_cache()`` between phases — there is no eviction.
+    Entries live until evicted LRU (``REPRO_SCHEDULE_CACHE_ENTRIES``; the
+    amortization contract: one pattern, many runs).  Workloads that stream
+    *new* patterns either rely on the LRU bound or call
+    ``clear_schedule_cache()`` between phases.
     """
 
     sched: Schedule
@@ -70,12 +109,49 @@ class ScheduleEntry:
     #: (select_backend reads it on every "auto" call)
     traffic_model: dict = dataclasses.field(default_factory=dict)
     hits: int = 0               # cache hits since the build
+    #: set on autotune winners: the (ct_size, cache_size) the sweep picked
+    autotuned: tuple | None = None
 
 
-_schedule_cache: dict = {}
-_ell_cache: dict = {}
-_stats = {"hits": 0, "misses": 0}
+_schedule_cache: "collections.OrderedDict" = collections.OrderedDict()
+_ell_cache: "collections.OrderedDict" = collections.OrderedDict()
+_stats = {"hits": 0, "misses": 0, "evictions": 0, "ell_evictions": 0,
+          "autotune_sweeps": 0}
 _lock = threading.Lock()
+#: The ELL cache has its own lock so its atomic check-and-build (which can
+#: allocate a full-matrix padded ELL) never stalls schedule-cache hits.
+#: Lock order where both are held: _lock, then _ell_lock.
+_ell_lock = threading.Lock()
+
+
+def _cache_budget() -> int:
+    """Per-cache entry cap from ``REPRO_SCHEDULE_CACHE_ENTRIES`` (>= 1)."""
+    raw = os.environ.get(CACHE_ENTRIES_ENV, "")
+    try:
+        return max(int(raw), 1)
+    except ValueError:
+        return DEFAULT_CACHE_ENTRIES
+
+
+def _cache_get(cache, key):
+    """LRU lookup; caller holds ``_lock``."""
+    value = cache.get(key)
+    if value is not None:
+        cache.move_to_end(key)
+    return value
+
+
+def _cache_put(cache, key, value, evict_key: str = "evictions") -> None:
+    """LRU insert with oldest-first eviction; caller holds the cache's lock.
+
+    Each cache bumps its own eviction counter (``evict_key``) so the two
+    locks never contend on one non-atomic ``+=``."""
+    cache[key] = value
+    cache.move_to_end(key)
+    budget = _cache_budget()
+    while len(cache) > budget:
+        cache.popitem(last=False)
+        _stats[evict_key] += 1
 
 
 def _content_key(a: CSR) -> bytes:
@@ -99,8 +175,8 @@ def _content_key(a: CSR) -> bytes:
 
 def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                  cache_size: float = 600_000.0, ct_size: int = 2048,
-                 b_is_sparse: bool = False,
-                 uniform_split: bool = True) -> ScheduleEntry:
+                 b_is_sparse: bool = False, uniform_split: bool = True,
+                 autotune: bool = False) -> ScheduleEntry:
     """Run Algorithm 1 once per (content, tile size, cache budget) and
     memoize; subsequent calls with the same key return the cached entry
     without touching the scheduler.
@@ -108,11 +184,22 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     Note: ``uniform_split`` defaults to True here (unlike raw
     ``build_schedule``) — the uniform variant is what the zero-padding XLA
     fast path and the Pallas kernel's grid map 1:1 onto.  Call sites that
-    want the paper's recursive step-2 splitting pass it explicitly."""
+    want the paper's recursive step-2 splitting pass it explicitly.
+
+    ``autotune=True`` replaces the single inspection with an Eq-3 sweep
+    over tile sizes and cache budgets (see module docs); ``ct_size`` /
+    ``cache_size`` then seed the candidate grid instead of being used
+    verbatim.  The sweep itself is memoized, so the grid is inspected once
+    per pattern."""
+    if autotune:
+        return _autotune_schedule(a, b_col=b_col, c_col=c_col, p=p,
+                                  cache_size=cache_size, ct_size=ct_size,
+                                  b_is_sparse=b_is_sparse,
+                                  uniform_split=uniform_split)
     key = (_content_key(a), b_col, c_col, p, float(cache_size), ct_size,
            b_is_sparse, uniform_split)
     with _lock:
-        entry = _schedule_cache.get(key)
+        entry = _cache_get(_schedule_cache, key)
         if entry is not None:
             entry.hits += 1
             _stats["hits"] += 1
@@ -130,33 +217,101 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                                                                  c_col))
     with _lock:
         _stats["misses"] += 1
-        _schedule_cache[key] = entry
+        _cache_put(_schedule_cache, key, entry)
     return entry
 
 
-def _csr_ell(a: CSR) -> Tuple[jax.Array, jax.Array]:
-    """Memoized full-matrix ELL (the unfused executor's format)."""
-    key = _content_key(a)
+def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
+                       cache_size: float, ct_size: int, b_is_sparse: bool,
+                       uniform_split: bool) -> ScheduleEntry:
+    """Eq-3 tile-size sweep, memoized under its own content-keyed entry.
+
+    Candidates: (AUTOTUNE_CT_GRID ∪ {ct_size, 2048}) × AUTOTUNE_CACHE_SCALES.
+    Ranking: Eq-3 predicted fast-memory traffic (``fused_bytes``) scaled by
+    the schedule's padded-FLOPs overhead, restricted to candidates whose raw
+    traffic does not exceed the default ``ct_size=2048`` schedule's — the
+    anchor itself is always a candidate, so the sweep can only improve on
+    the paper's heuristic, never regress it.
+    """
+    key = ("autotune", _content_key(a), b_col, c_col, p, float(cache_size),
+           ct_size, b_is_sparse, uniform_split)
     with _lock:
-        ell = _ell_cache.get(key)
-    if ell is None:
-        ell = fused_ops.csr_to_ell(a)
-        with _lock:
-            _ell_cache[key] = ell
+        entry = _cache_get(_schedule_cache, key)
+        if entry is not None:
+            entry.hits += 1
+            _stats["hits"] += 1
+            return entry
+
+    t0 = time.perf_counter()
+    cts = sorted(set(AUTOTUNE_CT_GRID) | {ct_size, DEFAULT_CT_SIZE})
+    candidates: dict = {}
+    for ct in cts:
+        for scale in AUTOTUNE_CACHE_SCALES:
+            cand = get_schedule(a, b_col=b_col, c_col=c_col, p=p,
+                                cache_size=cache_size * scale, ct_size=ct,
+                                b_is_sparse=b_is_sparse,
+                                uniform_split=uniform_split)
+            candidates[(ct, cache_size * scale)] = cand
+
+    def traffic(e: ScheduleEntry) -> float:
+        return e.traffic_model["fused_bytes"]
+
+    def score(e: ScheduleEntry) -> float:
+        return traffic(e) * (1.0 + e.dsched.padded_flops_overhead(b_col,
+                                                                  c_col))
+
+    anchor = candidates[(DEFAULT_CT_SIZE, cache_size)]
+    eligible = {k: e for k, e in candidates.items()
+                if traffic(e) <= traffic(anchor)}
+    best_key = min(eligible, key=lambda k: score(eligible[k]))
+    # the autotuned entry's inspection cost is the whole sweep (what a
+    # fig10-style amortization argument must pay off), not one candidate
+    best = dataclasses.replace(eligible[best_key], hits=0,
+                               autotuned=best_key,
+                               inspector_s=time.perf_counter() - t0)
+    with _lock:
+        # first-wins publish: a concurrent sweep on the same key may have
+        # finished while we ran (the candidates it used were memoized, so
+        # the duplicate work is bounded); only the published sweep counts
+        existing = _cache_get(_schedule_cache, key)
+        if existing is not None:
+            existing.hits += 1
+            _stats["hits"] += 1
+            return existing
+        _stats["autotune_sweeps"] += 1
+        _cache_put(_schedule_cache, key, best)
+    return best
+
+
+def _csr_ell(a: CSR) -> Tuple[jax.Array, jax.Array]:
+    """Memoized full-matrix ELL (the unfused executor's format).
+
+    Check-and-insert happens under a single ``_ell_lock`` acquisition: the
+    previous read-then-write pattern let two threads race past the miss
+    check and both build (and publish) the ELL arrays.  The dedicated lock
+    means a large build never blocks schedule-cache hits."""
+    key = _content_key(a)
+    with _ell_lock:
+        ell = _cache_get(_ell_cache, key)
+        if ell is None:
+            ell = fused_ops.csr_to_ell(a)
+            _cache_put(_ell_cache, key, ell, evict_key="ell_evictions")
     return ell
 
 
 def clear_schedule_cache() -> None:
-    with _lock:
+    with _lock, _ell_lock:
         _schedule_cache.clear()
         _ell_cache.clear()
-        _stats["hits"] = 0
-        _stats["misses"] = 0
+        for k in _stats:
+            _stats[k] = 0
 
 
 def schedule_cache_stats() -> dict:
-    with _lock:
-        return dict(_stats, entries=len(_schedule_cache))
+    """Counters plus live entry counts of both process-wide caches."""
+    with _lock, _ell_lock:
+        return dict(_stats, entries=len(_schedule_cache),
+                    ell_entries=len(_ell_cache))
 
 
 # --------------------------------------------------------------------------
@@ -214,8 +369,8 @@ def _gemm_spmm_pallas(entry: ScheduleEntry, b: jax.Array,
 # --------------------------------------------------------------------------
 def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
                       p: int = 8, cache_size: float = 600_000.0,
-                      ct_size: int = 2048,
-                      uniform_split: bool = True) -> jax.Array:
+                      ct_size: int = 2048, uniform_split: bool = True,
+                      autotune: bool = False) -> jax.Array:
     """``D = a @ (b_or_a1 @ c)`` through the tile-fusion schedule.
 
     Args:
@@ -227,6 +382,8 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
         "pallas" / "xla" / "unfused" override for benchmarks.
       p, cache_size, ct_size, uniform_split: Algorithm-1 knobs, part of the
         schedule-cache key.
+      autotune: sweep the Eq-3 tile-size grid instead of using ``ct_size``
+        verbatim (memoized; see module docs).
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend={backend!r}; expected one of {BACKENDS}")
@@ -251,7 +408,8 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
     b_col = c.shape[1] if b_is_sparse else b_or_a1.shape[1]
     entry = get_schedule(a, b_col=b_col, c_col=c.shape[1], p=p,
                          cache_size=cache_size, ct_size=ct_size,
-                         b_is_sparse=b_is_sparse, uniform_split=uniform_split)
+                         b_is_sparse=b_is_sparse, uniform_split=uniform_split,
+                         autotune=autotune)
     chosen = select_backend(entry) if backend == "auto" else backend
 
     if chosen == "unfused":

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..sparse.formats import CSR, TileELL
+from ..sparse.formats import CSR, TileELL, csr_gather_rows, ell_slot_coords
 from .schedule import DeviceSchedule
 
 
@@ -87,11 +87,16 @@ def _fused_gemm_spmm_uniform(b_pad, c, j_rows0, cols0, vals0,
 
 
 def _is_uniform(dsched: DeviceSchedule) -> bool:
+    """True when wavefront-0 tiles form one uniform grid of stride t_pad
+    (the layout the batched-matmul fast path and the Pallas kernel need).
+    An empty schedule is trivially uniform."""
     t = dsched.t_pad
     st = np.asarray(dsched.i_starts)
     ln = np.asarray(dsched.i_lens)
+    if st.size == 0:
+        return True
     return bool((st == np.arange(st.shape[0]) * t).all()
-                and (ln[:-1] == t).all() if st.size else True)
+                and (ln[:-1] == t).all())
 
 
 def fused_gemm_spmm(dsched: DeviceSchedule, b: jax.Array, c: jax.Array) -> jax.Array:
@@ -145,19 +150,28 @@ def _fused_spmm_spmm_impl(c, i_starts, op1_cols, op1_vals,
 
 
 def _op1_ell(a1: CSR, dsched: DeviceSchedule):
-    """Per-tile padded ELL of the op-1 rows (global columns into C)."""
+    """Per-tile padded ELL of the op-1 rows (global columns into C).
+
+    Vectorized: the tiles' contiguous row ranges are expanded into one flat
+    row vector with (tile, in-tile-slot) coordinates, then all nonzeros are
+    scattered by index arithmetic — no per-tile / per-row Python loops."""
     t_pad = dsched.t_pad
     n_t = dsched.n_tiles0
     counts = np.diff(a1.indptr)
     w = int(counts.max()) if counts.size else 1
-    cols = np.zeros((n_t, t_pad, max(w, 1)), np.int32)
-    vals = np.zeros((n_t, t_pad, max(w, 1)), np.float32)
-    for v in range(n_t):
-        i0, ln = int(dsched.i_starts[v]), int(dsched.i_lens[v])
-        for k in range(ln):
-            cc, vv = a1.row(i0 + k)
-            cols[v, k, : cc.shape[0]] = cc
-            vals[v, k, : cc.shape[0]] = vv
+    w = max(w, 1)
+    cols = np.zeros((n_t, t_pad, w), np.int32)
+    vals = np.zeros((n_t, t_pad, w), np.float32)
+    i_lens = np.asarray(dsched.i_lens, dtype=np.int64)
+    if int(i_lens.sum()):
+        tile_of, k_of = ell_slot_coords(i_lens)     # ranges concatenated
+        rows = np.asarray(dsched.i_starts, np.int64)[tile_of] + k_of
+        flat, lens = csr_gather_rows(a1, rows)
+        if flat.size:
+            row_rep, w_idx = ell_slot_coords(lens)
+            cols[tile_of[row_rep], k_of[row_rep], w_idx] = a1.indices[flat]
+            vals[tile_of[row_rep], k_of[row_rep], w_idx] = \
+                a1.data[flat].astype(np.float32)
     return cols, vals
 
 

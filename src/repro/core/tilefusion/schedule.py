@@ -18,7 +18,7 @@ import dataclasses
 
 import numpy as np
 
-from ..sparse.formats import CSR
+from ..sparse.formats import CSR, csr_gather_rows, ell_slot_coords
 from .scheduler import Schedule
 
 
@@ -88,24 +88,35 @@ class DeviceSchedule:
 
 
 def _ell_arrays(a: CSR, j_rows_list, j_max, pad_row, local_start=None):
+    """Pack ragged per-tile row lists into (T, j_max, w) ELL in one shot.
+
+    Flat index arithmetic instead of nested Python loops: every nonzero's
+    (tile, slot, width) scatter coordinate is derived from ``indptr`` diffs
+    (``csr_gather_rows`` + ``ell_slot_coords``), so packing is O(nnz)
+    regardless of tile count."""
     n_tiles = len(j_rows_list)
-    widths = [
-        int((a.indptr[jr + 1] - a.indptr[jr]).max()) if jr.size else 0
-        for jr in j_rows_list
-    ]
-    w = max(widths + [1])
+    sizes = np.asarray([jr.size for jr in j_rows_list], dtype=np.int64)
+    all_j = np.concatenate(j_rows_list).astype(np.int64) if n_tiles \
+        else np.zeros(0, np.int64)
+    row_nnz = (a.indptr[all_j + 1] - a.indptr[all_j]).astype(np.int64) \
+        if all_j.size else np.zeros(0, np.int64)
+    w = max(int(row_nnz.max()) if row_nnz.size else 0, 1)
     j_rows = np.full((n_tiles, j_max), pad_row, dtype=np.int32)
     cols = np.zeros((n_tiles, j_max, w), dtype=np.int32)
     vals = np.zeros((n_tiles, j_max, w), dtype=np.float32)
-    for v, jr in enumerate(j_rows_list):
-        j_rows[v, : jr.size] = jr
-        for k, j in enumerate(jr):
-            lo, hi = int(a.indptr[j]), int(a.indptr[j + 1])
-            c = a.indices[lo:hi]
+    if all_j.size:
+        # (tile, slot) of every packed row, then (row, width-slot) per nnz
+        tile_of, slot_of = ell_slot_coords(sizes)
+        j_rows[tile_of, slot_of] = all_j
+        flat, lens = csr_gather_rows(a, all_j)
+        if flat.size:
+            row_rep, w_idx = ell_slot_coords(lens)
+            tv, sv = tile_of[row_rep], slot_of[row_rep]
+            c = a.indices[flat].astype(np.int64)
             if local_start is not None:
-                c = c - local_start[v]
-            cols[v, k, : c.shape[0]] = c
-            vals[v, k, : c.shape[0]] = a.data[lo:hi].astype(np.float32)
+                c = c - np.asarray(local_start, np.int64)[tv]
+            cols[tv, sv, w_idx] = c.astype(np.int32)
+            vals[tv, sv, w_idx] = a.data[flat].astype(np.float32)
     return j_rows, cols, vals
 
 

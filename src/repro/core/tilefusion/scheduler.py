@@ -17,6 +17,15 @@ Builds a two-wavefront schedule of fused tiles from the sparsity pattern of
 
 The schedule is computed once per sparsity pattern (numpy, host side) and
 reused across steps — the amortization argument of paper §4.2.3.
+
+The inspector itself is O(nnz) vectorized: the fusion test ``all deps of
+row j in [i_start, i_end)`` is equivalent to ``row_min[j] >= i_start and
+row_max[j] < i_end`` where the per-row column extents come from one
+``ufunc.reduceat`` pass (``CSR.row_extents``, memoized per matrix).  Step 1
+classifies every candidate row in one shot instead of re-scanning CSR rows
+per tile; step 2's recursive split reuses the same extents.  The original
+row-at-a-time implementation is retained in ``reference.py`` for parity
+tests and the inspector benchmark.
 """
 from __future__ import annotations
 
@@ -26,7 +35,7 @@ from typing import List
 import numpy as np
 
 from ..sparse.formats import CSR
-from .cost_model import tile_cost_elements
+from .cost_model import tile_cost_elements, tile_costs_batch
 
 
 @dataclasses.dataclass
@@ -76,21 +85,26 @@ class Schedule:
 
 
 def _fused_mask(a: CSR, i_start: int, i_end: int, j_candidates: np.ndarray) -> np.ndarray:
-    """True for candidate rows whose every dependency lies in [i_start, i_end)."""
-    out = np.zeros(j_candidates.shape[0], dtype=bool)
-    for k, j in enumerate(j_candidates):
-        lo, hi = int(a.indptr[j]), int(a.indptr[j + 1])
-        cols = a.indices[lo:hi]
-        out[k] = bool(cols.size == 0 or
-                      ((cols >= i_start) & (cols < i_end)).all())
-    return out
+    """True for candidate rows whose every dependency lies in [i_start, i_end).
+
+    O(len(j_candidates)) after the matrix's one-time extents pass; empty
+    rows are vacuously fusable (extents sentinel (n_cols, -1))."""
+    row_min, row_max = a.row_extents()
+    j = np.asarray(j_candidates)
+    return (row_min[j] >= i_start) & (row_max[j] < i_end)
 
 
 def _split_tile(a: CSR, tile: Tile, b_col: int, c_col: int, b_is_sparse: bool,
-                cache_size: float, demoted: list) -> List[Tile]:
-    """Step-2 recursive split (factor 2) until the Eq-3 cost fits cache_size."""
-    cost = tile_cost_elements(a, tile.i_start, tile.i_end, tile.j_rows,
-                              b_col, c_col, b_is_sparse)
+                cache_size: float, demoted: list,
+                cost: float | None = None) -> List[Tile]:
+    """Step-2 recursive split (factor 2) until the Eq-3 cost fits cache_size.
+
+    ``cost`` lets the caller pass the tile's already-batched Eq-3 cost so
+    the common all-tiles-fit case never re-derives it; recursive children
+    compute their own."""
+    if cost is None:
+        cost = tile_cost_elements(a, tile.i_start, tile.i_end, tile.j_rows,
+                                  b_col, c_col, b_is_sparse)
     if cost <= cache_size or tile.n_i <= 1:
         if cost > cache_size and tile.n_j > 0 and tile.n_i <= 1:
             # cannot shrink the producer side further; shed consumers instead
@@ -113,8 +127,10 @@ def _split_tile(a: CSR, tile: Tile, b_col: int, c_col: int, b_is_sparse: bool,
 
 
 def _split_wf1_tile(a: CSR, j_rows: np.ndarray, b_col: int, c_col: int,
-                    b_is_sparse: bool, cache_size: float) -> List[Tile]:
-    cost = tile_cost_elements(a, 0, 0, j_rows, b_col, c_col, b_is_sparse)
+                    b_is_sparse: bool, cache_size: float,
+                    cost: float | None = None) -> List[Tile]:
+    if cost is None:
+        cost = tile_cost_elements(a, 0, 0, j_rows, b_col, c_col, b_is_sparse)
     if cost <= cache_size or j_rows.size <= 1:
         return [Tile(0, 0, j_rows)]
     mid = j_rows.size // 2
@@ -132,18 +148,26 @@ def _balance(j_all: np.ndarray, t: int, p: int) -> List[np.ndarray]:
 
 
 def _step1(a: CSR, t: int, n_i: int, n_j: int):
-    """Coarse tile fusion at tile size t (lines 5-14 of Algorithm 1)."""
-    wf0: List[Tile] = []
-    unfused: List[np.ndarray] = []
-    for i0 in range(0, n_i, t):
-        i1 = min(i0 + t, n_i)
-        j_cand = np.arange(i0, min(i1, n_j), dtype=np.int32)
-        if j_cand.size:
-            m = _fused_mask(a, i0, i1, j_cand)
-            wf0.append(Tile(i0, i1, j_cand[m]))
-            unfused.append(j_cand[~m])
-        else:
-            wf0.append(Tile(i0, i1, np.zeros(0, np.int32)))
+    """Coarse tile fusion at tile size t (lines 5-14 of Algorithm 1).
+
+    Fully vectorized: every candidate row j < min(n_i, n_j) belongs to
+    coarse tile v = j // t, and the fusion test is one extents comparison
+    over all candidates at once; rows are then grouped per tile by
+    splitting the (already tile-sorted) index vector at tile boundaries.
+    """
+    tile_lo = np.arange(0, n_i, t, dtype=np.int64)
+    tile_hi = np.minimum(tile_lo + t, n_i)
+    j_all = np.arange(min(n_i, n_j), dtype=np.int64)
+    row_min, row_max = a.row_extents()
+    v = j_all // t
+    fused = (row_min[j_all] >= tile_lo[v]) & (row_max[j_all] < tile_hi[v])
+    f_j = j_all[fused].astype(np.int32)
+    u_j = j_all[~fused].astype(np.int32)
+    f_parts = np.split(f_j, np.searchsorted(f_j, tile_lo[1:]))
+    u_parts = np.split(u_j, np.searchsorted(u_j, tile_lo[1:]))
+    wf0 = [Tile(int(lo), int(hi), fp)
+           for lo, hi, fp in zip(tile_lo, tile_hi, f_parts)]
+    unfused: List[np.ndarray] = [up for up in u_parts if up.size]
     if n_j > n_i:  # second op has more rows than first op produces tiles for
         unfused.append(np.arange(n_i, n_j, dtype=np.int32))
     return wf0, unfused
@@ -179,33 +203,42 @@ def build_schedule(
     else:
         t = max(-(-n_i // p), 1)
 
+    def _wf0_costs(wf0):
+        return tile_costs_batch(a, [tl.i_start for tl in wf0],
+                                [tl.i_end for tl in wf0],
+                                [tl.j_rows for tl in wf0],
+                                b_col, c_col, b_is_sparse)
+
     if uniform_split:
         # ---- Step 2 (uniform variant): halve t globally until it fits ----
         while True:
             wf0, unfused = _step1(a, t, n_i, n_j)
-            worst = max((tile_cost_elements(a, tl.i_start, tl.i_end,
-                                            tl.j_rows, b_col, c_col,
-                                            b_is_sparse) for tl in wf0),
-                        default=0.0)
+            costs = _wf0_costs(wf0)
+            worst = float(costs.max()) if costs.size else 0.0
             if worst <= cache_size or t <= 64:
                 break
             t //= 2
         split_wf0, demoted = wf0, []
     else:
         wf0, unfused = _step1(a, t, n_i, n_j)
-        # ---- Step 2: fused tile splitting (lines 16-23) ----
+        # ---- Step 2: fused tile splitting (lines 16-23); entry costs are
+        # batched so only genuinely oversized tiles pay the recursion ----
         demoted = []
         split_wf0 = []
-        for tl in wf0:
+        for tl, cost in zip(wf0, _wf0_costs(wf0)):
             split_wf0.extend(_split_tile(a, tl, b_col, c_col, b_is_sparse,
-                                         cache_size, demoted))
+                                         cache_size, demoted, cost=cost))
 
     j_wf1 = np.concatenate(unfused + demoted) if (unfused or demoted) \
         else np.zeros(0, np.int32)
     wf1: List[Tile] = []
-    for chunk in _balance(j_wf1, t, p):
+    chunks = _balance(j_wf1, t, p)
+    chunk_costs = tile_costs_batch(a, np.zeros(len(chunks), np.int64),
+                                   np.zeros(len(chunks), np.int64),
+                                   chunks, b_col, c_col, b_is_sparse)
+    for chunk, cost in zip(chunks, chunk_costs):
         wf1.extend(_split_wf1_tile(a, chunk, b_col, c_col, b_is_sparse,
-                                   cache_size))
+                                   cache_size, cost=cost))
 
     sched = Schedule(wavefronts=[split_wf0, wf1], n_i=n_i, n_j=n_j, t=t)
     sched.validate()
@@ -214,13 +247,16 @@ def build_schedule(
 
 def fused_compute_ratio(a: CSR, ct_size: int = 2048) -> float:
     """Figure 1's metric: fraction of second-op *computation* (nonzeros) whose
-    dependencies are contained in coarse tiles of size ct_size."""
-    n = a.n_rows
-    fused_nnz = 0
-    for i0 in range(0, a.n_cols, ct_size):
-        i1 = min(i0 + ct_size, a.n_cols)
-        j_cand = np.arange(i0, min(i1, n), dtype=np.int32)
-        m = _fused_mask(a, i0, i1, j_cand)
-        for j in j_cand[m]:
-            fused_nnz += int(a.indptr[j + 1] - a.indptr[j])
+    dependencies are contained in coarse tiles of size ct_size.
+
+    One vectorized pass: candidate rows j < min(n_cols, n_rows), tile
+    range [ (j//ct)·ct, min((j//ct+1)·ct, n_cols) ), extents containment,
+    then a masked sum of per-row nonzero counts."""
+    row_min, row_max = a.row_extents()
+    j = np.arange(min(a.n_cols, a.n_rows), dtype=np.int64)
+    i0 = (j // ct_size) * ct_size
+    i1 = np.minimum(i0 + ct_size, a.n_cols)
+    m = (row_min[j] >= i0) & (row_max[j] < i1)
+    counts = (a.indptr[1:] - a.indptr[:-1]).astype(np.int64)
+    fused_nnz = int(counts[j[m]].sum())
     return fused_nnz / max(a.nnz, 1)

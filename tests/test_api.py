@@ -18,8 +18,8 @@ def fresh_cache():
 def test_cache_hit_identical_pattern_builds_once():
     a = banded_spd(256, 4, seed=0)
     e1 = api.get_schedule(a, b_col=16, c_col=16)
-    assert api.schedule_cache_stats() == {"hits": 0, "misses": 1,
-                                          "entries": 1}
+    stats = api.schedule_cache_stats()
+    assert (stats["hits"], stats["misses"], stats["entries"]) == (0, 1, 1)
     e2 = api.get_schedule(a, b_col=16, c_col=16)
     assert e2 is e1                       # schedule built exactly once
     assert api.schedule_cache_stats()["hits"] == 1
@@ -104,6 +104,72 @@ def test_auto_selects_fused_on_friendly_pattern():
     entry = api.get_schedule(a, b_col=32, c_col=32, cache_size=100_000.0,
                              ct_size=128)
     assert api.select_backend(entry) in ("xla", "pallas")
+
+
+def test_autotune_never_worse_than_default():
+    """Acceptance: the Eq-3 sweep may never pick a schedule predicting more
+    fast-memory traffic than the paper's ct_size=2048 heuristic."""
+    mats = [banded_spd(2048, 6, seed=10), powerlaw_graph(2048, 8, seed=9),
+            powerlaw_graph(1024, 4, seed=11)]
+    for a in mats:
+        api.clear_schedule_cache()
+        e_def = api.get_schedule(a, b_col=32, c_col=32,
+                                 ct_size=api.DEFAULT_CT_SIZE)
+        e_at = api.get_schedule(a, b_col=32, c_col=32, autotune=True)
+        assert e_at.traffic_model["fused_bytes"] \
+            <= e_def.traffic_model["fused_bytes"]
+        assert e_at.autotuned is not None
+        e_at.sched.validate()
+
+
+def test_autotune_sweep_memoized():
+    a = banded_spd(512, 4, seed=12)
+    e1 = api.get_schedule(a, b_col=16, c_col=16, autotune=True)
+    sweeps = api.schedule_cache_stats()["autotune_sweeps"]
+    assert sweeps == 1
+    e2 = api.get_schedule(a, b_col=16, c_col=16, autotune=True)
+    assert e2 is e1                       # the sweep ran exactly once
+    assert api.schedule_cache_stats()["autotune_sweeps"] == 1
+
+
+def test_autotune_matmul_matches_reference():
+    a = powerlaw_graph(512, 6, seed=13)
+    rng = np.random.default_rng(13)
+    b = rng.standard_normal((512, 16))
+    c = rng.standard_normal((16, 8))
+    want = fused_ref.unfused_gemm_spmm(a, b, c)
+    for backend in ("auto", "xla"):
+        got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                                    jnp.asarray(c, jnp.float32),
+                                    backend=backend, autotune=True)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3,
+                                   atol=2e-3, err_msg=backend)
+
+
+def test_cache_lru_eviction(monkeypatch):
+    monkeypatch.setenv(api.CACHE_ENTRIES_ENV, "2")
+    a = banded_spd(256, 4, seed=0)
+    for ct in (32, 64, 128):              # three distinct keys, budget two
+        api.get_schedule(a, b_col=8, c_col=8, ct_size=ct)
+    stats = api.schedule_cache_stats()
+    assert stats["entries"] == 2 and stats["evictions"] == 1
+    # the evicted (oldest) key re-inspects; the fresh ones still hit
+    api.get_schedule(a, b_col=8, c_col=8, ct_size=128)
+    assert api.schedule_cache_stats()["hits"] == 1
+    api.get_schedule(a, b_col=8, c_col=8, ct_size=32)
+    assert api.schedule_cache_stats()["misses"] == 4
+
+
+def test_ell_cache_reported_and_bounded(monkeypatch):
+    monkeypatch.setenv(api.CACHE_ENTRIES_ENV, "1")
+    b = jnp.ones((128, 8), jnp.float32)
+    c = jnp.ones((8, 8), jnp.float32)
+    for seed in (0, 1):
+        api.tile_fused_matmul(banded_spd(128, 4, seed=seed), b, c,
+                              backend="unfused")
+    stats = api.schedule_cache_stats()
+    assert stats["ell_entries"] == 1      # bounded and visible
+    assert stats["ell_evictions"] >= 1
 
 
 def test_invalid_backend_rejected():

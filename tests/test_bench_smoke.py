@@ -1,0 +1,46 @@
+"""Benchmark bit-rot check: every driver runs end-to-end in smoke mode.
+
+Each module in ``benchmarks.run.MODULES`` is executed in-process with
+``REPRO_BENCH_SMOKE=1`` (tiny problem sizes, 1 rep — see benchmarks/util.py)
+so a driver broken by an API change fails tier-1 instead of rotting until
+someone runs the full suite.  Parametrized per module so the failure names
+the driver.
+"""
+import importlib
+import os
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:
+    sys.path.insert(0, REPO_ROOT)
+
+from benchmarks import run as bench_run  # noqa: E402
+
+
+@pytest.mark.parametrize("mod_name", bench_run.MODULES)
+def test_benchmark_driver_smoke(mod_name, monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_SMOKE", "1")
+    from repro.core.tilefusion import api
+    api.clear_schedule_cache()
+    mod = importlib.import_module(f"benchmarks.{mod_name}")
+    rows = mod.run()
+    assert rows, f"{mod_name}.run() produced no rows"
+    for row in rows:
+        name, us, derived = row          # the run.py CSV contract
+        assert isinstance(name, str) and name
+        float(us)
+        assert isinstance(derived, str)
+
+
+def test_smoke_flag_scales_down(monkeypatch):
+    from benchmarks import util
+    monkeypatch.delenv("REPRO_BENCH_SMOKE", raising=False)
+    assert not util.smoke()
+    assert util.bench_n(4096) == 4096
+    monkeypatch.setenv("REPRO_BENCH_SMOKE", "1")
+    assert util.smoke()
+    assert util.bench_n(4096) == 256
+    assert util.sweep((1, 2, 3), (1,)) == (1,)
+    assert len(util.bench_suite(4096)) == 2

@@ -79,6 +79,39 @@ def test_baselines_match_oracle():
         rtol=2e-3, atol=2e-3)
 
 
+def _device_schedule_with_tiles(i_starts, i_lens, t_pad):
+    from repro.core.tilefusion.schedule import DeviceSchedule
+    n_t = len(i_starts)
+    return DeviceSchedule(
+        n_i=int(sum(i_lens)), n_j=4, t_pad=t_pad,
+        i_starts=np.asarray(i_starts, np.int32),
+        i_lens=np.asarray(i_lens, np.int32),
+        j_rows0=np.full((n_t, 1), 4, np.int32),
+        ell_cols0=np.zeros((n_t, 1, 1), np.int32),
+        ell_vals0=np.zeros((n_t, 1, 1), np.float32),
+        j_rows1=np.full((0, 1), 4, np.int32),
+        ell_cols1=np.zeros((0, 1, 1), np.int32),
+        ell_vals1=np.zeros((0, 1, 1), np.float32),
+    )
+
+
+def test_is_uniform_empty_schedule():
+    """Zero wavefront-0 tiles is trivially uniform (the old and/if-else
+    precedence only got this right by accident)."""
+    assert fused_ops._is_uniform(_device_schedule_with_tiles([], [], 8))
+
+
+def test_is_uniform_grid_and_non_grid():
+    assert fused_ops._is_uniform(
+        _device_schedule_with_tiles([0, 8, 16], [8, 8, 5], 8))
+    # non-contiguous starts -> not uniform
+    assert not fused_ops._is_uniform(
+        _device_schedule_with_tiles([0, 16], [8, 8], 8))
+    # short tile in the middle -> not uniform
+    assert not fused_ops._is_uniform(
+        _device_schedule_with_tiles([0, 8, 16], [8, 4, 8], 8))
+
+
 def test_overlapped_redundancy_positive():
     """CA-style tiling replicates work (the paper's critique)."""
     a = powerlaw_graph(512, 8, seed=2)

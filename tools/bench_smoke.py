@@ -1,0 +1,24 @@
+#!/usr/bin/env python
+"""Run every benchmark driver at one tiny problem size (bit-rot check).
+
+Equivalent to ``python -m benchmarks.run --smoke``; exists so CI can call a
+single script without remembering the flag.  Run from the repo root with
+``PYTHONPATH=src``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import run  # noqa: E402
+
+
+def main() -> None:
+    sys.argv = [sys.argv[0], "--smoke"] + sys.argv[1:]
+    run.main()
+
+
+if __name__ == "__main__":
+    main()
