@@ -2,13 +2,22 @@
 
 Paper: 1.02-1.22× gmean (memory-bound, smaller win than GeMM-SpMM).
 Same container caveat as table2 — traffic_saving is the kernel-path metric.
+
+Beyond the paper: the fused timing now covers both executors — the XLA
+vmapped one and the wavefront-0 Pallas kernel (compiled on TPU, interpret
+elsewhere) — and a hub-boosted power-law row reports the hybrid-ELL
+width/memory win: packed elements at the auto width cap vs the pad-to-max
+packer a single max-degree row used to force.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sparse.formats import hybrid_width_cap
+from repro.core.sparse.random import hub_powerlaw
 from repro.core.tilefusion import api
+from repro.core.tilefusion.cost_model import hybrid_packed_elements
 
 from .util import bench_n, bench_suite, gmean, sweep, time_fn
 
@@ -21,7 +30,7 @@ KNOBS = dict(p=P, cache_size=CACHE, ct_size=512)
 def run():
     rows = []
     n = bench_n(N)
-    suite = bench_suite(N)
+    suite = dict(bench_suite(N), powerlaw_hub=hub_powerlaw(n, seed=5))
     rng = np.random.default_rng(1)
     for ccol in sweep((32, 64, 128), (32,)):
         speedups, savings = {}, {}
@@ -32,6 +41,8 @@ def run():
             sched = entry.sched
             t_f = time_fn(api.tile_fused_matmul, a, a, c, backend="xla",
                           **KNOBS)
+            t_p = time_fn(api.tile_fused_matmul, a, a, c, backend="pallas",
+                          **KNOBS)
             t_u = time_fn(api.tile_fused_matmul, a, a, c, backend="unfused",
                           **KNOBS)
             tm = entry.traffic_model
@@ -41,7 +52,22 @@ def run():
                 f"table3/spmm_spmm/{name}/ccol{ccol}/fused", t_f,
                 f"speedup={t_u/t_f:.2f};fused_ratio={sched.fused_ratio:.2f};"
                 f"traffic_saving={tm['traffic_saving']:.2f}"))
+            rows.append((
+                f"table3/spmm_spmm/{name}/ccol{ccol}/pallas", t_p,
+                f"speedup={t_u/t_p:.2f};width_cap={entry.width_cap}"))
         rows.append((f"table3/spmm_spmm/GMEAN/ccol{ccol}", 0.0,
                      f"gmean_speedup={gmean(speedups.values()):.3f};"
                      f"mean_traffic_saving={np.mean(list(savings.values())):.3f}"))
+
+    # hybrid-ELL width/memory win on the hub row (format-level, time-free)
+    a = suite["powerlaw_hub"]
+    counts = np.diff(a.indptr)
+    cap = hybrid_width_cap(counts)
+    packed = hybrid_packed_elements(counts, cap)
+    pad = int(a.n_rows) * max(int(counts.max()), 1)
+    rows.append((
+        f"table3/hybrid_ell/powerlaw_hub/n{n}", 0.0,
+        f"width_cap={cap};max_deg={int(counts.max())};nnz={a.nnz};"
+        f"packed_elems={packed};padmax_elems={pad};"
+        f"mem_win={pad / max(packed, 1):.1f}x"))
     return rows

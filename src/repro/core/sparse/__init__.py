@@ -1,4 +1,6 @@
-from .formats import CSR, TileELL, block_csr_pattern
+from .formats import (CSR, HybridELL, TileELL, block_csr_pattern,
+                      hybrid_width_cap)
 from . import random
 
-__all__ = ["CSR", "TileELL", "block_csr_pattern", "random"]
+__all__ = ["CSR", "HybridELL", "TileELL", "block_csr_pattern",
+           "hybrid_width_cap", "random"]

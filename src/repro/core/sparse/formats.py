@@ -8,6 +8,7 @@ the paper's scheduler (§4.2.3).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Tuple
 
 import numpy as np
@@ -98,6 +99,23 @@ class CSR:
         return CSR(n_rows, n_cols, indptr, ucols, merged)
 
 
+def csr_content_digest(a: CSR) -> bytes:
+    """Content hash of a CSR matrix (shape + pattern + values), memoized
+    per instance (CSR is treated as immutable).  Keys every content-
+    addressed cache in the system: the schedule/ELL caches and the per-
+    schedule op-1 pack memo."""
+    digest = getattr(a, "_content_digest", None)
+    if digest is None:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.asarray([a.n_rows, a.n_cols], np.int64).tobytes())
+        h.update(np.ascontiguousarray(a.indptr, np.int32).tobytes())
+        h.update(np.ascontiguousarray(a.indices, np.int32).tobytes())
+        h.update(np.ascontiguousarray(a.data, np.float64).tobytes())
+        digest = h.digest()
+        object.__setattr__(a, "_content_digest", digest)
+    return digest
+
+
 def csr_gather_rows(a: CSR, rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """Vectorized multi-row gather: flat positions of ``rows``' entries.
 
@@ -132,6 +150,112 @@ def ell_slot_coords(lens: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     cum = np.cumsum(lens)
     slot = np.arange(total, dtype=np.int64) - np.repeat(cum - lens, lens)
     return row, slot
+
+
+#: Degree quantile used when a HybridELL cap is requested by quantile rather
+#: than by the traffic-optimal search — the autotune width-cap sweep tries
+#: this alongside the optimal cap and pad-to-max.
+DEFAULT_WIDTH_QUANTILE = 0.99
+
+
+def hybrid_width_cap(counts: np.ndarray, quantile: float | None = None) -> int:
+    """Width cap for a hybrid ELL body over rows of nonzero counts ``counts``.
+
+    ``quantile=None`` (default) returns the *traffic-optimal* cap: the width
+    ``w`` minimizing ``2 * n_rows * w + 3 * spill(w)`` where ``spill(w)`` is
+    the number of entries past slot ``w`` — a body slot streams (col, val),
+    a spilled entry (row, col, val), the same 2-vs-3 weighting the Eq-3
+    packed-traffic pricing uses.  A quantile in (0, 1] caps at that degree
+    quantile instead (1.0 degenerates to pad-to-max).  Always >= 1.
+    """
+    counts = np.asarray(counts, dtype=np.int64)
+    if counts.size == 0:
+        return 1
+    if quantile is not None:
+        return max(int(np.quantile(counts, quantile)), 1)
+    n = counts.shape[0]
+    cands = np.unique(np.concatenate([[1], np.unique(counts)]))
+    cands = cands[cands >= 1]
+    # spill(w) = sum(max(counts - w, 0)) for every candidate, vectorized via
+    # a sort + suffix sums: rows with count > w each contribute (count - w)
+    srt = np.sort(counts)
+    suffix = np.concatenate([np.cumsum(srt[::-1])[::-1], [0]])
+    pos = np.searchsorted(srt, cands, side="right")
+    spill = suffix[pos] - (n - pos) * cands
+    cost = 2 * n * cands + 3 * spill
+    return int(cands[np.argmin(cost)])
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridELL:
+    """Width-capped ELL body + COO spill lanes — the hub-safe row format.
+
+    Pad-to-max ELL packs every row to the *maximum* degree, so one hub row
+    of a power-law graph inflates the whole allocation (``n_rows × max_deg``,
+    GB-scale at GNN sizes).  HybridELL bounds the body width at a cap (a
+    degree quantile or the traffic-optimal split, see ``hybrid_width_cap``):
+
+      * **body** — ``cols``/``vals`` of shape ``(n_rows, width)``: each row's
+        first ``width`` entries, padded with col=0/val=0 (padded slots
+        contribute nothing to an SpMM).
+      * **spill lanes** — the tail entries of rows wider than the cap, as
+        flat COO triples ``(spill_rows, spill_cols, spill_vals)`` sorted by
+        row.  ``spill_rows[k]`` indexes the *packed row set* (position in
+        the ``rows`` argument of ``from_csr_rows``), so consumers apply the
+        spill with one scatter-add after the dense ELL body pass.
+
+    Total storage is ``n_rows * width + n_spill`` value slots, bounded by
+    the typical-degree mass instead of the max degree — the SpArch-style
+    condensed representation this repo's power-law workloads need.
+    """
+
+    cols: np.ndarray        # int32 (n_rows, width) body, pad col 0 / val 0
+    vals: np.ndarray        # float (n_rows, width)
+    spill_rows: np.ndarray  # int32 (n_spill,) packed-row index of the entry
+    spill_cols: np.ndarray  # int32 (n_spill,)
+    spill_vals: np.ndarray  # float (n_spill,)
+
+    @property
+    def width(self) -> int:
+        return int(self.cols.shape[1])
+
+    @property
+    def n_spill(self) -> int:
+        return int(self.spill_rows.shape[0])
+
+    def packed_elements(self) -> int:
+        """Value slots the format stores (body incl. padding + spill)."""
+        return int(self.cols.size + self.spill_rows.size)
+
+    @staticmethod
+    def from_csr_rows(a: CSR, rows: np.ndarray,
+                      cap: int | None = None) -> "HybridELL":
+        """Pack ``rows`` of ``a`` with body width ``min(cap, max_deg)``.
+
+        ``cap=None`` derives the traffic-optimal cap from the rows' own
+        degree distribution.  O(nnz) — same flat scatter as ``TileELL`` with
+        one extra mask splitting body slots from spill entries."""
+        rows = np.asarray(rows, dtype=np.int64)
+        flat, lens = csr_gather_rows(a, rows)
+        if cap is None:
+            cap = hybrid_width_cap(lens)
+        w_max = int(lens.max()) if rows.size else 1
+        w = max(min(int(cap), max(w_max, 1)), 1)
+        cols = np.zeros((rows.shape[0], w), dtype=np.int32)
+        vals = np.zeros((rows.shape[0], w), dtype=np.float64)
+        if not flat.size:
+            return HybridELL(cols, vals, np.zeros(0, np.int32),
+                             np.zeros(0, np.int32), np.zeros(0, np.float64))
+        r, k = ell_slot_coords(lens)
+        body = k < w
+        cols[r[body], k[body]] = a.indices[flat[body]]
+        vals[r[body], k[body]] = a.data[flat[body]]
+        sp = ~body
+        return HybridELL(
+            cols=cols, vals=vals,
+            spill_rows=r[sp].astype(np.int32),
+            spill_cols=a.indices[flat[sp]].astype(np.int32),
+            spill_vals=a.data[flat[sp]].astype(np.float64))
 
 
 def block_csr_pattern(a: CSR, block: int) -> CSR:

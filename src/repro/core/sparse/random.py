@@ -55,6 +55,21 @@ def powerlaw_graph(n: int, avg_deg: int = 8, alpha: float = 2.1, seed: int = 0) 
     return a
 
 
+def hub_powerlaw(n: int, avg_deg: int = 8, seed: int = 0) -> CSR:
+    """Power-law graph with one row boosted to degree ~n/2 — the single
+    max-degree hub that makes pad-to-max ELL width explode (the hybrid
+    width-cap stress case shared by benchmarks and regression tests)."""
+    base = powerlaw_graph(n, avg_deg, seed=seed)
+    rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(base.indptr))
+    hub = int(np.random.default_rng(seed).integers(n))
+    hcols = np.arange(0, n, 2, dtype=np.int64)
+    return CSR.from_coo(
+        n, n,
+        np.concatenate([rows, np.full(hcols.shape[0], hub, np.int64)]),
+        np.concatenate([base.indices.astype(np.int64), hcols]),
+        np.concatenate([base.data, np.ones(hcols.shape[0])]))
+
+
 def block_diag_noise(n: int, block: int = 256, density: float = 0.3,
                      off_frac: float = 0.05, seed: int = 0) -> CSR:
     """Mostly block-diagonal matrix with a sprinkle of off-block entries.
@@ -84,6 +99,7 @@ def block_diag_noise(n: int, block: int = 256, density: float = 0.3,
 SUITES = {
     "banded_spd": banded_spd,
     "powerlaw_graph": powerlaw_graph,
+    "hub_powerlaw": hub_powerlaw,
     "block_diag_noise": block_diag_noise,
 }
 

@@ -12,11 +12,22 @@ owns the two decisions every call site used to repeat by hand:
      (Cheshmi et al.) realized as a process-wide cache.
 
   2. **Executor selection (Eq. 3 + capability).**  ``backend="auto"`` picks
-     between the Pallas wavefront-0 kernel (TPU, uniform schedules), the
-     XLA vmapped executor, and the unfused two-call baseline using the
-     schedule's Eq-3 traffic model: patterns that fuse nothing (or would
-     move more bytes fused than unfused) fall back to the unfused code.
-     Benchmarks pass an explicit ``backend=`` override.
+     between the Pallas wavefront-0 kernels (uniform schedules on capable
+     hardware — TPU, or interpret mode forced via ``PALLAS_INTERPRET=1``;
+     both GeMM-SpMM and SpMM-SpMM lower), the XLA vmapped executor, and the
+     unfused two-call baseline using the schedule's Eq-3 traffic model:
+     patterns that fuse nothing (or would move more bytes fused than
+     unfused) fall back to the unfused code.  Benchmarks pass an explicit
+     ``backend=`` override.
+
+**Hybrid-ELL width cap (``width_cap``).**  Every ELL the executors stream
+(wavefront-1 body, SpMM-SpMM op-1, the unfused full-matrix format) is
+packed by the shared ``formats.HybridELL`` packer with a width cap —
+"auto" picks the traffic-optimal cap from the degree distribution, so one
+max-degree hub row of a power-law graph no longer inflates the padded
+allocation; the capped tails travel as COO spill lanes applied with one
+scatter-add.  The resolved cap is part of the schedule and ELL cache keys,
+and the autotune sweep tries candidate caps alongside tile sizes.
 
 **Tile-size autotuning (``autotune=True``).**  ``get_schedule`` /
 ``tile_fused_matmul`` accept ``autotune=True`` to sweep a small
@@ -45,7 +56,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import hashlib
 import os
 import threading
 import time
@@ -55,8 +65,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..sparse.formats import CSR
-from . import fused_ops
+from ..sparse.formats import (CSR, DEFAULT_WIDTH_QUANTILE,
+                              csr_content_digest, hybrid_width_cap)
+from . import cost_model, fused_ops
 from .schedule import DeviceSchedule, to_device_schedule
 from .scheduler import Schedule, build_schedule
 
@@ -109,8 +120,12 @@ class ScheduleEntry:
     #: (select_backend reads it on every "auto" call)
     traffic_model: dict = dataclasses.field(default_factory=dict)
     hits: int = 0               # cache hits since the build
-    #: set on autotune winners: the (ct_size, cache_size) the sweep picked
+    #: set on autotune winners: the (ct_size, cache_size, width_cap) the
+    #: sweep picked
     autotuned: tuple | None = None
+    #: resolved hybrid-ELL width cap the schedule was packed with (None =
+    #: pad-to-max); part of the cache key, consumed by the executors
+    width_cap: int | None = None
 
 
 _schedule_cache: "collections.OrderedDict" = collections.OrderedDict()
@@ -155,28 +170,71 @@ def _cache_put(cache, key, value, evict_key: str = "evictions") -> None:
 
 
 def _content_key(a: CSR) -> bytes:
-    """Content hash of a CSR matrix.  The schedule *structure* depends only
-    on the pattern, but the DeviceSchedule bakes in the values (ELL), so the
-    key covers both — same pattern with new values rebuilds, same matrix
-    content always hits."""
-    digest = getattr(a, "_content_digest", None)
-    if digest is None:
-        h = hashlib.blake2b(digest_size=16)
-        h.update(np.asarray([a.n_rows, a.n_cols], np.int64).tobytes())
-        h.update(np.ascontiguousarray(a.indptr, np.int32).tobytes())
-        h.update(np.ascontiguousarray(a.indices, np.int32).tobytes())
-        h.update(np.ascontiguousarray(a.data, np.float64).tobytes())
-        digest = h.digest()
-        # CSR is a frozen dataclass treated as immutable; memoize the O(nnz)
-        # hash per instance so the per-layer hot path pays it once
-        object.__setattr__(a, "_content_digest", digest)
-    return digest
+    """Content hash of a CSR matrix (``formats.csr_content_digest``).  The
+    schedule *structure* depends only on the pattern, but the DeviceSchedule
+    bakes in the values (ELL), so the key covers both — same pattern with
+    new values rebuilds, same matrix content always hits."""
+    return csr_content_digest(a)
+
+
+def _resolve_width_cap(a: CSR, width_cap) -> int | None:
+    """Resolve the ``width_cap`` knob to a concrete cap (the cache key).
+
+    ``"auto"`` derives the traffic-optimal cap from the matrix's own degree
+    distribution (``formats.hybrid_width_cap``); ``None`` disables capping
+    (pad-to-max, the pre-hybrid layout); an int is clamped to >= 1."""
+    if width_cap is None:
+        return None
+    if width_cap == "auto":
+        # memoized per CSR instance (treated as immutable, like the content
+        # digest): the cap search sorts the degree distribution once, not
+        # once per hot-path call
+        cap = getattr(a, "_auto_width_cap", None)
+        if cap is None:
+            cap = hybrid_width_cap(np.diff(a.indptr))
+            object.__setattr__(a, "_auto_width_cap", cap)
+        return cap
+    return max(int(width_cap), 1)
+
+
+def _candidate_width_caps(a: CSR, caller_cap: int | None) -> list:
+    """Caps the autotune sweep tries: the caller's, the traffic-optimal,
+    the high-quantile, and pad-to-max (as an explicit max-degree cap)."""
+    counts = np.diff(a.indptr)
+    w_max = max(int(counts.max()), 1) if counts.size else 1
+    caps = {w_max if caller_cap is None else caller_cap,
+            hybrid_width_cap(counts),
+            hybrid_width_cap(counts, DEFAULT_WIDTH_QUANTILE),
+            w_max}
+    return sorted(caps)
+
+
+def _packed_ell_bytes(a: CSR, dsched: DeviceSchedule, b_is_sparse: bool,
+                      dtype_bytes: int = 4) -> float:
+    """Bytes the executors stream for the *packed* sparse operands: the
+    wavefront-1 hybrid body (col+val per slot, padding included) plus 3
+    elements per spill lane, and — for SpMM-SpMM — the op-1 hybrid at the
+    schedule's cap (op-1 ≈ A, the cost model's standing caveat).  This is
+    the term the width cap actually moves (Eq-3 traffic is cap-invariant),
+    so the autotune sweep scores with it."""
+    n = (int(dsched.ell_cols1.size) * 2
+         + cost_model.SPILL_ELEMENTS * int(dsched.spill_rows1.size))
+    if b_is_sparse:
+        # one arithmetic, owned by cost_model (a.n_cols = no-cap sentinel:
+        # no row can be wider, so the clamp resolves it to pad-to-max)
+        w = cost_model._capped_body_width(
+            a, dsched.width_cap if dsched.width_cap is not None
+            else max(a.n_cols, 1))
+        spill = int(cost_model._spill_cumsum(a, w)[-1])
+        n += a.n_rows * w * 2 + cost_model.SPILL_ELEMENTS * spill
+    return float(n * dtype_bytes)
 
 
 def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                  cache_size: float = 600_000.0, ct_size: int = 2048,
                  b_is_sparse: bool = False, uniform_split: bool = True,
-                 autotune: bool = False) -> ScheduleEntry:
+                 autotune: bool = False,
+                 width_cap: int | str | None = "auto") -> ScheduleEntry:
     """Run Algorithm 1 once per (content, tile size, cache budget) and
     memoize; subsequent calls with the same key return the cached entry
     without touching the scheduler.
@@ -187,17 +245,25 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     want the paper's recursive step-2 splitting pass it explicitly.
 
     ``autotune=True`` replaces the single inspection with an Eq-3 sweep
-    over tile sizes and cache budgets (see module docs); ``ct_size`` /
-    ``cache_size`` then seed the candidate grid instead of being used
-    verbatim.  The sweep itself is memoized, so the grid is inspected once
-    per pattern."""
+    over tile sizes, cache budgets, and hybrid width caps (see module
+    docs); ``ct_size`` / ``cache_size`` / ``width_cap`` then seed the
+    candidate grid instead of being used verbatim.  The sweep itself is
+    memoized, so the grid is inspected once per pattern.
+
+    ``width_cap`` bounds the hybrid-ELL body width (wavefront 1 always;
+    op-1 packing and Eq-3 op-1 pricing when ``b_is_sparse``): ``"auto"``
+    (default) picks the traffic-optimal cap from the degree distribution,
+    ``None`` disables capping (pad-to-max).  The resolved cap is part of
+    the cache key — changing it can never reuse a stale schedule."""
+    cap = _resolve_width_cap(a, width_cap)
     if autotune:
         return _autotune_schedule(a, b_col=b_col, c_col=c_col, p=p,
                                   cache_size=cache_size, ct_size=ct_size,
                                   b_is_sparse=b_is_sparse,
-                                  uniform_split=uniform_split)
+                                  uniform_split=uniform_split,
+                                  width_cap=cap)
     key = (_content_key(a), b_col, c_col, p, float(cache_size), ct_size,
-           b_is_sparse, uniform_split)
+           b_is_sparse, uniform_split, cap)
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None:
@@ -208,13 +274,14 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     sched = build_schedule(a, b_col=b_col, c_col=c_col, p=p,
                            cache_size=cache_size, ct_size=ct_size,
                            b_is_sparse=b_is_sparse,
-                           uniform_split=uniform_split)
-    dsched = to_device_schedule(a, sched)
+                           uniform_split=uniform_split, width_cap=cap)
+    dsched = to_device_schedule(a, sched, width_cap=cap)
+    tm = dsched.hbm_traffic_model(b_col, c_col)
+    tm["packed_ell_bytes"] = _packed_ell_bytes(a, dsched, b_is_sparse)
     entry = ScheduleEntry(sched=sched, dsched=dsched, b_col=b_col,
                           c_col=c_col, b_is_sparse=b_is_sparse,
                           inspector_s=time.perf_counter() - t0,
-                          traffic_model=dsched.hbm_traffic_model(b_col,
-                                                                 c_col))
+                          traffic_model=tm, width_cap=cap)
     with _lock:
         _stats["misses"] += 1
         _cache_put(_schedule_cache, key, entry)
@@ -223,18 +290,21 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
 
 def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
                        cache_size: float, ct_size: int, b_is_sparse: bool,
-                       uniform_split: bool) -> ScheduleEntry:
-    """Eq-3 tile-size sweep, memoized under its own content-keyed entry.
+                       uniform_split: bool,
+                       width_cap: int | None) -> ScheduleEntry:
+    """Eq-3 tile-size × width-cap sweep, memoized under its own entry.
 
-    Candidates: (AUTOTUNE_CT_GRID ∪ {ct_size, 2048}) × AUTOTUNE_CACHE_SCALES.
-    Ranking: Eq-3 predicted fast-memory traffic (``fused_bytes``) scaled by
-    the schedule's padded-FLOPs overhead, restricted to candidates whose raw
-    traffic does not exceed the default ``ct_size=2048`` schedule's — the
-    anchor itself is always a candidate, so the sweep can only improve on
-    the paper's heuristic, never regress it.
+    Candidates: (AUTOTUNE_CT_GRID ∪ {ct_size, 2048}) × AUTOTUNE_CACHE_SCALES
+    × candidate width caps (``_candidate_width_caps``).  Ranking: Eq-3
+    predicted fast-memory traffic (``fused_bytes``) scaled by the schedule's
+    padded-FLOPs overhead, plus the packed-ELL bytes the cap actually moves;
+    restricted to candidates whose raw traffic does not exceed the default
+    ``ct_size=2048`` schedule's at the caller's cap — the anchor itself is
+    always a candidate, so the sweep can only improve on the paper's
+    heuristic, never regress it.
     """
     key = ("autotune", _content_key(a), b_col, c_col, p, float(cache_size),
-           ct_size, b_is_sparse, uniform_split)
+           ct_size, b_is_sparse, uniform_split, width_cap)
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None:
@@ -244,23 +314,37 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
 
     t0 = time.perf_counter()
     cts = sorted(set(AUTOTUNE_CT_GRID) | {ct_size, DEFAULT_CT_SIZE})
+    if width_cap is None:
+        # pad-to-max resolves to the max-degree cap so keys stay concrete
+        counts = np.diff(a.indptr)
+        anchor_cap = max(int(counts.max()), 1) if counts.size else 1
+    else:
+        anchor_cap = width_cap
+    # the cap only reaches Algorithm 1 through the sparse-op-1 Eq-3 charge;
+    # for dense B every cap yields the identical host schedule, so sweeping
+    # caps there would just re-run the same inspection — keep the caller's
+    caps = _candidate_width_caps(a, width_cap) if b_is_sparse \
+        else [anchor_cap]
     candidates: dict = {}
     for ct in cts:
         for scale in AUTOTUNE_CACHE_SCALES:
-            cand = get_schedule(a, b_col=b_col, c_col=c_col, p=p,
-                                cache_size=cache_size * scale, ct_size=ct,
-                                b_is_sparse=b_is_sparse,
-                                uniform_split=uniform_split)
-            candidates[(ct, cache_size * scale)] = cand
+            for cap in caps:
+                cand = get_schedule(a, b_col=b_col, c_col=c_col, p=p,
+                                    cache_size=cache_size * scale,
+                                    ct_size=ct, b_is_sparse=b_is_sparse,
+                                    uniform_split=uniform_split,
+                                    width_cap=cap)
+                candidates[(ct, cache_size * scale, cap)] = cand
 
     def traffic(e: ScheduleEntry) -> float:
         return e.traffic_model["fused_bytes"]
 
     def score(e: ScheduleEntry) -> float:
-        return traffic(e) * (1.0 + e.dsched.padded_flops_overhead(b_col,
-                                                                  c_col))
+        return (traffic(e)
+                * (1.0 + e.dsched.padded_flops_overhead(b_col, c_col))
+                + e.traffic_model["packed_ell_bytes"])
 
-    anchor = candidates[(DEFAULT_CT_SIZE, cache_size)]
+    anchor = candidates[(DEFAULT_CT_SIZE, cache_size, anchor_cap)]
     eligible = {k: e for k, e in candidates.items()
                 if traffic(e) <= traffic(anchor)}
     best_key = min(eligible, key=lambda k: score(eligible[k]))
@@ -283,18 +367,19 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
     return best
 
 
-def _csr_ell(a: CSR) -> Tuple[jax.Array, jax.Array]:
-    """Memoized full-matrix ELL (the unfused executor's format).
+def _csr_ell(a: CSR, width_cap: int | None = None) -> Tuple[jax.Array, ...]:
+    """Memoized full-matrix hybrid ELL (the unfused executor's format),
+    keyed on (content, width cap).
 
     Check-and-insert happens under a single ``_ell_lock`` acquisition: the
     previous read-then-write pattern let two threads race past the miss
     check and both build (and publish) the ELL arrays.  The dedicated lock
     means a large build never blocks schedule-cache hits."""
-    key = _content_key(a)
+    key = (_content_key(a), width_cap)
     with _ell_lock:
         ell = _cache_get(_ell_cache, key)
         if ell is None:
-            ell = fused_ops.csr_to_ell(a)
+            ell = fused_ops.csr_to_ell(a, width_cap=width_cap)
             _cache_put(_ell_cache, key, ell, evict_key="ell_evictions")
     return ell
 
@@ -317,6 +402,36 @@ def schedule_cache_stats() -> dict:
 # --------------------------------------------------------------------------
 # Backend selection (Eq-3 cost model + capability checks)
 # --------------------------------------------------------------------------
+def _pallas_capable() -> bool:
+    """Capability gate shared by the GeMM-SpMM and SpMM-SpMM Pallas arms;
+    the logic lives with the kernels' own mode resolution
+    (``kernels.config``) so dispatch and execution can never disagree."""
+    from ...kernels.config import compiled_or_forced
+    return compiled_or_forced()
+
+
+def _spmm_pallas_fits_vmem(entry: ScheduleEntry, c_col: int) -> bool:
+    """SpMM-SpMM kernel VMEM feasibility: the kernel stages all of C plus a
+    ``(t, n)`` one-hot per grid step, which scales with the *problem* size
+    (unlike the GeMM kernel, whose blocks scale only with t).  Auto
+    dispatch must fall back to the XLA executor above the budget instead
+    of handing Mosaic an unallocatable kernel."""
+    from ...kernels.ops import VMEM_BUDGET
+    ds = entry.dsched
+    t, n = ds.t_pad, ds.n_i
+    j0 = ds.j_rows0.shape[1]
+    w0 = ds.ell_cols0.shape[2]
+    w1 = ds.width_cap if ds.width_cap is not None else n
+    elems = (n * c_col          # C staged in full
+             + t * n            # op-1 one-hot w1_mat
+             + 2 * t * c_col    # D1 tile + spill block
+             + 2 * t * w1       # op-1 ELL body
+             + 2 * j0 * w0      # fused-rows ELL
+             + j0 * t           # densified A tile
+             + j0 * c_col)      # fused rows out
+    return elems * 4 <= VMEM_BUDGET
+
+
 def select_backend(entry: ScheduleEntry) -> str:
     """Resolve ``backend="auto"`` for an inspected schedule."""
     tm = entry.traffic_model
@@ -325,13 +440,42 @@ def select_backend(entry: ScheduleEntry) -> str:
         # pathological pattern: fusion saves no traffic — Eq 3 says the
         # intermediate round-trips memory either way, so take the simpler code
         return "unfused"
-    if (not entry.b_is_sparse
-            and fused_ops._is_uniform(entry.dsched)
-            and jax.default_backend() == "tpu"):
-        # compiled Mosaic kernel; interpret-mode Pallas is never a win over
-        # the XLA executor, so CPU stays on "xla"
-        return "pallas"
+    if fused_ops._is_uniform(entry.dsched) and _pallas_capable():
+        # both op pairs lower to wavefront-0 Pallas kernels on a uniform
+        # grid (GeMM-SpMM and, via the hybrid op-1 gather, SpMM-SpMM)
+        if not entry.b_is_sparse:
+            return "pallas"
+        if _spmm_pallas_fits_vmem(entry, entry.c_col):
+            return "pallas"
     return "xla"
+
+
+def _require_uniform(ds: DeviceSchedule) -> None:
+    if not fused_ops._is_uniform(ds):
+        raise ValueError(
+            "backend='pallas' needs a uniform schedule; inspect with "
+            "uniform_split=True (the default) or use backend='xla'")
+
+
+def _wf1_pallas(ds: DeviceSchedule, d: jax.Array, d1: jax.Array,
+                dtype) -> jax.Array:
+    """Post-barrier wavefront 1 for the Pallas paths: hybrid ELL body via
+    the Pallas SpMM kernel over the completed D1, then the spill lanes
+    (hub-row tails past the width cap) as one scatter-add."""
+    from ...kernels import ops as kops
+    c_col = d.shape[1]
+    if ds.j_rows1.size:
+        t1, j1, w1 = ds.ell_cols1.shape
+        rows1 = kops.spmm_ell(
+            jnp.asarray(ds.ell_cols1.reshape(t1 * j1, w1)),
+            jnp.asarray(ds.ell_vals1.reshape(t1 * j1, w1), dtype), d1)
+        d = d.at[ds.j_rows1.reshape(-1)].set(rows1.reshape(-1, c_col),
+                                             mode="drop")
+    if ds.spill_rows1.size:
+        d = d.at[jnp.asarray(ds.spill_rows1)].add(
+            jnp.asarray(ds.spill_vals1, dtype)[:, None]
+            * d1[jnp.asarray(ds.spill_cols1)])
+    return d
 
 
 def _gemm_spmm_pallas(entry: ScheduleEntry, b: jax.Array,
@@ -340,10 +484,7 @@ def _gemm_spmm_pallas(entry: ScheduleEntry, b: jax.Array,
     kernel over the spilled D1 — the pallas_call boundary is the barrier."""
     from ...kernels import ops as kops
     ds = entry.dsched
-    if not fused_ops._is_uniform(ds):
-        raise ValueError(
-            "backend='pallas' needs a uniform schedule; inspect with "
-            "uniform_split=True (the default) or use backend='xla'")
+    _require_uniform(ds)
     t, n_t = ds.t_pad, ds.n_tiles0
     if b.shape[0] != ds.n_i:
         raise ValueError(f"b has {b.shape[0]} rows, schedule expects {ds.n_i}")
@@ -354,14 +495,39 @@ def _gemm_spmm_pallas(entry: ScheduleEntry, b: jax.Array,
     c_col = c.shape[1]
     d = jnp.zeros((ds.n_j, c_col), b.dtype).at[
         ds.j_rows0.reshape(-1)].set(rows0.reshape(-1, c_col), mode="drop")
-    if ds.j_rows1.size:
-        t1, j1, w1 = ds.ell_cols1.shape
-        rows1 = kops.spmm_ell(
-            jnp.asarray(ds.ell_cols1.reshape(t1 * j1, w1)),
-            jnp.asarray(ds.ell_vals1.reshape(t1 * j1, w1), b.dtype),
-            d1[: ds.n_i])
-        d = d.at[ds.j_rows1.reshape(-1)].set(rows1, mode="drop")
-    return d
+    return _wf1_pallas(ds, d, d1[: ds.n_i], b.dtype)
+
+
+def _spmm_spmm_pallas(entry: ScheduleEntry, a1: CSR,
+                      c: jax.Array) -> jax.Array:
+    """SpMM-SpMM wavefront 0 through the Pallas kernel: hybrid op-1 ELL
+    (shared packer, spill pre-accumulated outside the kernel) feeds the
+    tile-local second SpMM; wavefront 1 runs over the spilled D1."""
+    from ...kernels import ops as kops
+    ds = entry.dsched
+    _require_uniform(ds)
+    t, n_t = ds.t_pad, ds.n_tiles0
+    if a1.n_rows != ds.n_i:
+        raise ValueError(
+            f"op-1 has {a1.n_rows} rows, schedule expects {ds.n_i}")
+    if c.shape[0] != a1.n_cols:
+        raise ValueError(
+            f"c has {c.shape[0]} rows, op-1 has {a1.n_cols} columns")
+    c_col = c.shape[1]
+    o_cols, o_vals, spill_flat, spill_cols, spill_vals = fused_ops._op1_ell(
+        a1, ds, width_cap=ds.width_cap)
+    d1_spill = jnp.zeros((n_t * t, c_col), c.dtype)
+    if spill_flat.size:
+        d1_spill = d1_spill.at[jnp.asarray(spill_flat)].add(
+            jnp.asarray(spill_vals, c.dtype)[:, None]
+            * c[jnp.asarray(spill_cols)])
+    d1, rows0 = kops.tile_fused_spmm_spmm_wf0(
+        jnp.asarray(o_cols), jnp.asarray(o_vals, c.dtype), d1_spill,
+        jnp.asarray(ds.ell_cols0), jnp.asarray(ds.ell_vals0, c.dtype),
+        c, t=t)
+    d = jnp.zeros((ds.n_j, c_col), c.dtype).at[
+        ds.j_rows0.reshape(-1)].set(rows0.reshape(-1, c_col), mode="drop")
+    return _wf1_pallas(ds, d, d1[: ds.n_i], c.dtype)
 
 
 # --------------------------------------------------------------------------
@@ -370,7 +536,8 @@ def _gemm_spmm_pallas(entry: ScheduleEntry, b: jax.Array,
 def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
                       p: int = 8, cache_size: float = 600_000.0,
                       ct_size: int = 2048, uniform_split: bool = True,
-                      autotune: bool = False) -> jax.Array:
+                      autotune: bool = False,
+                      width_cap: int | str | None = "auto") -> jax.Array:
     """``D = a @ (b_or_a1 @ c)`` through the tile-fusion schedule.
 
     Args:
@@ -379,11 +546,15 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
         SpMM-SpMM (op-1 rows gathered per tile).
       c: dense ``(b_col, c_col)`` (GeMM-SpMM) / ``(n, c_col)`` (SpMM-SpMM).
       backend: "auto" (Eq-3 cost model + capability), or an explicit
-        "pallas" / "xla" / "unfused" override for benchmarks.
+        "pallas" / "xla" / "unfused" override for benchmarks.  Both op
+        pairs lower to "pallas" (SpMM-SpMM via the hybrid op-1 gather).
       p, cache_size, ct_size, uniform_split: Algorithm-1 knobs, part of the
         schedule-cache key.
-      autotune: sweep the Eq-3 tile-size grid instead of using ``ct_size``
-        verbatim (memoized; see module docs).
+      autotune: sweep the Eq-3 tile-size × width-cap grid instead of using
+        ``ct_size`` / ``width_cap`` verbatim (memoized; see module docs).
+      width_cap: hybrid-ELL body width cap — "auto" (traffic-optimal from
+        the degree distribution), an explicit int, or None for pad-to-max.
+        Part of the schedule/ELL cache keys.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend={backend!r}; expected one of {BACKENDS}")
@@ -392,12 +563,13 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
 
     def run_unfused():
         if b_is_sparse:
-            cols_a, vals_a = _csr_ell(a)
-            cols_a1, vals_a1 = _csr_ell(b_or_a1)
-            return fused_ops.unfused_spmm_spmm(cols_a, vals_a, cols_a1,
-                                               vals_a1, c)
-        return fused_ops.unfused_gemm_spmm(*_csr_ell(a),
-                                           jnp.asarray(b_or_a1), c)
+            hell_a = _csr_ell(a, _resolve_width_cap(a, width_cap))
+            hell_a1 = _csr_ell(b_or_a1,
+                               _resolve_width_cap(b_or_a1, width_cap))
+            return fused_ops.unfused_spmm_spmm(*hell_a, *hell_a1, c)
+        return fused_ops.unfused_gemm_spmm(
+            *_csr_ell(a, _resolve_width_cap(a, width_cap)),
+            jnp.asarray(b_or_a1), c)
 
     if backend == "unfused":
         return run_unfused()          # no inspection needed for the baseline
@@ -409,16 +581,14 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
     entry = get_schedule(a, b_col=b_col, c_col=c.shape[1], p=p,
                          cache_size=cache_size, ct_size=ct_size,
                          b_is_sparse=b_is_sparse, uniform_split=uniform_split,
-                         autotune=autotune)
+                         autotune=autotune, width_cap=width_cap)
     chosen = select_backend(entry) if backend == "auto" else backend
 
     if chosen == "unfused":
         return run_unfused()
     if b_is_sparse:
         if chosen == "pallas":
-            raise ValueError(
-                "backend='pallas' supports dense op-1 (GeMM-SpMM) only; "
-                "SpMM-SpMM runs on 'xla' (or 'auto')")
+            return _spmm_spmm_pallas(entry, b_or_a1, c)
         return fused_ops.fused_spmm_spmm(entry.dsched, b_or_a1, c)
     b = jnp.asarray(b_or_a1)
     if chosen == "pallas":

@@ -19,6 +19,11 @@ import numpy as np
 
 from ..sparse.formats import CSR, csr_gather_rows
 
+#: Elements a spilled hybrid-ELL entry streams (row, col, val) vs the 2
+#: (col, val) of a body slot — shared by the packer's cap search
+#: (``formats.hybrid_width_cap``) and the pricing here.
+SPILL_ELEMENTS = 3
+
 #: Default fast-memory budget: 64 MiB of the ~128 MiB v5e VMEM (leave half for
 #: double-buffering and the matmul operands), expressed in bytes.
 DEFAULT_VMEM_BUDGET_BYTES = 64 * 1024 * 1024
@@ -26,6 +31,59 @@ DEFAULT_VMEM_BUDGET_BYTES = 64 * 1024 * 1024
 #: CPU-style default used by benchmarks mirroring the paper's setting
 #: (L1+L2+L3/core on CascadeLake ~ 2.4 MB).
 DEFAULT_CPU_CACHE_BYTES = int(2.4 * 1024 * 1024)
+
+
+def hybrid_packed_elements(counts: np.ndarray, cap: int | None) -> int:
+    """Value slots a HybridELL pack of rows with nonzero ``counts`` streams:
+    padded body (``n_rows * width``) plus ``SPILL_ELEMENTS`` per spilled
+    entry.  ``cap=None`` means pad-to-max (no spill)."""
+    counts = np.asarray(counts, dtype=np.int64)
+    if counts.size == 0:
+        return 0
+    w_max = max(int(counts.max()), 1)
+    w = w_max if cap is None else max(min(int(cap), w_max), 1)
+    spill = int(np.maximum(counts - w, 0).sum())
+    return int(counts.shape[0]) * w + SPILL_ELEMENTS * spill
+
+
+def _row_counts(a: CSR) -> np.ndarray:
+    """Per-row nonzero counts, memoized per CSR instance (immutable, like
+    ``row_extents``) — the capped Eq-3 pricing reads them on every tile."""
+    rc = getattr(a, "_row_counts", None)
+    if rc is None:
+        rc = np.diff(a.indptr).astype(np.int64)
+        object.__setattr__(a, "_row_counts", rc)
+    return rc
+
+
+def _spill_cumsum(a: CSR, w: int) -> np.ndarray:
+    """``cs[i] = Σ_{r<i} max(counts[r] - w, 0)``, memoized per (matrix, w):
+    any row range's spill count is one subtraction, so the recursive step-2
+    split pays O(1) per tile instead of re-diffing the whole indptr."""
+    cache = getattr(a, "_spill_cumsum_cache", None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(a, "_spill_cumsum_cache", cache)
+    cs = cache.get(w)
+    if cs is None:
+        cs = np.concatenate(
+            [[0], np.cumsum(np.maximum(_row_counts(a) - w, 0))])
+        cache[w] = cs
+    return cs
+
+
+def _capped_body_width(a: CSR, width_cap: int) -> int:
+    counts = _row_counts(a)
+    w_max = max(int(counts.max()), 1) if counts.size else 1
+    return max(min(int(width_cap), w_max), 1)
+
+
+def _op1_packed_range(a: CSR, lo: int, hi: int, width_cap: int) -> int:
+    """Capped-width op-1 charge for rows [lo, hi): body slots at the global
+    capped width plus the range's spill entries (3 elements each)."""
+    w = _capped_body_width(a, width_cap)
+    cs = _spill_cumsum(a, w)
+    return (hi - lo) * w + SPILL_ELEMENTS * int(cs[hi] - cs[lo])
 
 
 def tile_cost_elements(
@@ -36,8 +94,14 @@ def tile_cost_elements(
     b_col: int,
     c_col: int,
     b_is_sparse: bool,
+    width_cap: int | None = None,
 ) -> float:
-    """Eq 3 in elements (multiply by dtype bytes for a byte budget)."""
+    """Eq 3 in elements (multiply by dtype bytes for a byte budget).
+
+    ``width_cap`` (sparse-B only): price the op-1 operand as the hybrid-ELL
+    traffic the executor actually streams — body rows padded to the capped
+    width plus 3 elements per spilled entry — instead of the raw nonzero
+    count.  ``None`` keeps the paper's idealized nnz charge."""
     t = max(i_end - i_start, 0)
     if j_rows.size:
         # one flat gather of the tile's A entries (no per-row concatenate)
@@ -49,7 +113,11 @@ def tile_cost_elements(
     if b_is_sparse:
         # nonzeros of the B rows in [i_start, i_end) — approximated by the
         # same CSR when B == A (SpMM-SpMM case), else caller passes its own.
-        nz_b = int(a.indptr[min(i_end, a.n_rows)] - a.indptr[min(i_start, a.n_rows)])
+        lo, hi = min(i_start, a.n_rows), min(i_end, a.n_rows)
+        if width_cap is None:
+            nz_b = int(a.indptr[hi] - a.indptr[lo])
+        else:
+            nz_b = _op1_packed_range(a, lo, hi, width_cap)
         nz = nnz_a + nz_b
         idx = nnz_a + nz_b  # int32 per nonzero
     else:
@@ -66,6 +134,7 @@ def tile_costs_batch(
     b_col: int,
     c_col: int,
     b_is_sparse: bool,
+    width_cap: int | None = None,
 ) -> np.ndarray:
     """Eq 3 for many tiles in one vectorized pass.
 
@@ -100,7 +169,13 @@ def tile_costs_batch(
     if b_is_sparse:
         lo = np.minimum(i_starts, a.n_rows)
         hi = np.minimum(i_ends, a.n_rows)
-        nz_b = (a.indptr[hi] - a.indptr[lo]).astype(np.int64)
+        if width_cap is None:
+            nz_b = (a.indptr[hi] - a.indptr[lo]).astype(np.int64)
+        else:
+            w = _capped_body_width(a, width_cap)
+            sp_cum = _spill_cumsum(a, w)
+            nz_b = ((hi - lo) * w
+                    + SPILL_ELEMENTS * (sp_cum[hi] - sp_cum[lo]))
         nz = nnz_a + nz_b
         idx = nnz_a + nz_b
     else:

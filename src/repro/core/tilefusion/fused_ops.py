@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..sparse.formats import CSR, TileELL, csr_gather_rows, ell_slot_coords
+from ..sparse.formats import (CSR, HybridELL, TileELL, csr_content_digest,
+                              ell_slot_coords)
 from .schedule import DeviceSchedule
 
 
@@ -34,12 +35,23 @@ def _ell_rows(cols, vals, table):
     return acc
 
 
+def _spill_add(d, spill_rows, spill_cols, spill_vals, table):
+    """Scatter-add COO spill lanes: d[r] += v * table[c] for each lane.
+
+    The hybrid-ELL tail pass: called after the body's ``.set`` scatter so a
+    capped row's total is body + tail.  Zero lanes are a no-op (traced
+    statically — callers may skip the call entirely when size is 0)."""
+    return d.at[spill_rows].add(
+        spill_vals.astype(table.dtype)[:, None] * table[spill_cols])
+
+
 # --------------------------------------------------------------------------
 # Fused executors (tile fusion)
 # --------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("t_pad", "n_i", "n_j"))
 def _fused_gemm_spmm_impl(b_pad, c, i_starts, j_rows0, cols0, vals0,
-                          j_rows1, cols1, vals1, *, t_pad, n_i, n_j):
+                          j_rows1, cols1, vals1, srows1, scols1, svals1,
+                          *, t_pad, n_i, n_j):
     c_col = c.shape[1]
 
     # ---- wavefront 0: one vmapped step per fused tile ----
@@ -59,17 +71,20 @@ def _fused_gemm_spmm_impl(b_pad, c, i_starts, j_rows0, cols0, vals0,
     d = jnp.zeros((n_j, c_col), c.dtype).at[j_rows0.reshape(-1)].set(
         rows0.reshape(-1, c_col), mode="drop")
 
-    # ---- barrier; wavefront 1: global gather over D1 ----
+    # ---- barrier; wavefront 1: global gather over D1 (body, then spill) ----
     if j_rows1.shape[0]:
         rows1 = _ell_rows(cols1, vals1, d1)              # (T1, j1_max, c_col)
         d = d.at[j_rows1.reshape(-1)].set(
             rows1.reshape(-1, c_col), mode="drop")
+    if srows1.shape[0]:
+        d = _spill_add(d, srows1, scols1, svals1, d1)
     return d
 
 
 @functools.partial(jax.jit, static_argnames=("t", "n_i", "n_j"))
 def _fused_gemm_spmm_uniform(b_pad, c, j_rows0, cols0, vals0,
-                             j_rows1, cols1, vals1, *, t, n_i, n_j):
+                             j_rows1, cols1, vals1, srows1, scols1, svals1,
+                             *, t, n_i, n_j):
     """Uniform-tile fast path: one batched matmul, no dynamic slices, no
     padding waste — the executor twin of the Pallas kernel's grid."""
     c_col = c.shape[1]
@@ -83,6 +98,8 @@ def _fused_gemm_spmm_uniform(b_pad, c, j_rows0, cols0, vals0,
         rows1 = _ell_rows(cols1, vals1, d1[:n_i])
         d = d.at[j_rows1.reshape(-1)].set(rows1.reshape(-1, c_col),
                                           mode="drop")
+    if srows1.shape[0]:
+        d = _spill_add(d, srows1, scols1, svals1, d1[:n_i])
     return d
 
 
@@ -99,6 +116,11 @@ def _is_uniform(dsched: DeviceSchedule) -> bool:
                 and (ln[:-1] == t).all())
 
 
+def _wf1_spill_args(dsched: DeviceSchedule, dtype):
+    return (jnp.asarray(dsched.spill_rows1), jnp.asarray(dsched.spill_cols1),
+            jnp.asarray(dsched.spill_vals1, dtype))
+
+
 def fused_gemm_spmm(dsched: DeviceSchedule, b: jax.Array, c: jax.Array) -> jax.Array:
     if _is_uniform(dsched):
         t = dsched.t_pad
@@ -110,6 +132,7 @@ def fused_gemm_spmm(dsched: DeviceSchedule, b: jax.Array, c: jax.Array) -> jax.A
             jnp.asarray(dsched.ell_vals0, c.dtype),
             jnp.asarray(dsched.j_rows1), jnp.asarray(dsched.ell_cols1),
             jnp.asarray(dsched.ell_vals1, c.dtype),
+            *_wf1_spill_args(dsched, c.dtype),
             t=t, n_i=dsched.n_i, n_j=dsched.n_j)
     b_pad = jnp.pad(b, ((0, dsched.t_pad), (0, 0)))
     return _fused_gemm_spmm_impl(
@@ -118,23 +141,25 @@ def fused_gemm_spmm(dsched: DeviceSchedule, b: jax.Array, c: jax.Array) -> jax.A
         jnp.asarray(dsched.ell_cols0), jnp.asarray(dsched.ell_vals0, c.dtype),
         jnp.asarray(dsched.j_rows1), jnp.asarray(dsched.ell_cols1),
         jnp.asarray(dsched.ell_vals1, c.dtype),
+        *_wf1_spill_args(dsched, c.dtype),
         t_pad=dsched.t_pad, n_i=dsched.n_i, n_j=dsched.n_j)
 
 
 @functools.partial(jax.jit, static_argnames=("t_pad", "n_i", "n_j"))
-def _fused_spmm_spmm_impl(c, i_starts, op1_cols, op1_vals,
+def _fused_spmm_spmm_impl(c, i_starts, op1_cols, op1_vals, d1_spill,
                           j_rows0, cols0, vals0, j_rows1, cols1, vals1,
-                          *, t_pad, n_i, n_j):
+                          srows1, scols1, svals1, *, t_pad, n_i, n_j):
     c_col = c.shape[1]
 
-    def tile_fn(i_start, o_cols, o_vals, j_rows, cols, vals):
-        # op1 SpMM rows of the tile (ELL over global C)
-        d1_t = _ell_rows(o_cols, o_vals, c)
+    def tile_fn(i_start, o_cols, o_vals, d1_sp, j_rows, cols, vals):
+        # op1 SpMM rows of the tile: hybrid ELL body over global C, plus the
+        # tile's precomputed spill delta (hub-row tails past the width cap)
+        d1_t = _ell_rows(o_cols, o_vals, c) + d1_sp
         rows = _ell_rows(cols, vals, d1_t)               # in-tile gather
         return d1_t, rows
 
     d1_tiles, rows0 = jax.vmap(tile_fn)(
-        i_starts, op1_cols, op1_vals, j_rows0, cols0, vals0)
+        i_starts, op1_cols, op1_vals, d1_spill, j_rows0, cols0, vals0)
 
     row_idx = (i_starts[:, None] + jnp.arange(t_pad)[None, :]).reshape(-1)
     row_idx = jnp.where(row_idx < n_i, row_idx, n_i)
@@ -146,53 +171,98 @@ def _fused_spmm_spmm_impl(c, i_starts, op1_cols, op1_vals,
     if j_rows1.shape[0]:
         rows1 = _ell_rows(cols1, vals1, d1)
         d = d.at[j_rows1.reshape(-1)].set(rows1.reshape(-1, c_col), mode="drop")
+    if srows1.shape[0]:
+        d = _spill_add(d, srows1, scols1, svals1, d1)
     return d
 
 
-def _op1_ell(a1: CSR, dsched: DeviceSchedule):
-    """Per-tile padded ELL of the op-1 rows (global columns into C).
+def _op1_ell(a1: CSR, dsched: DeviceSchedule, width_cap: int | None = None):
+    """Per-tile hybrid ELL of the op-1 rows (global columns into C).
 
-    Vectorized: the tiles' contiguous row ranges are expanded into one flat
-    row vector with (tile, in-tile-slot) coordinates, then all nonzeros are
-    scattered by index arithmetic — no per-tile / per-row Python loops."""
+    Routes through the shared ``HybridELL`` packer (one packer for every
+    ELL in the system): the tiles' contiguous row ranges are concatenated
+    into one packed row set, the body comes back reshaped to
+    ``(T0, t_pad, w)``, and entries past ``width_cap`` come back as flat
+    spill lanes addressed by *tile-padded* D1 position
+    (``tile * t_pad + in_tile_slot``) so executors can scatter-add them
+    onto the flattened D1 tiles before the in-tile gather runs.
+
+    Memoized on the (cached) DeviceSchedule per op-1 content: the O(nnz)
+    host repack runs once per (schedule, a1, cap), not once per executor
+    call — the same amortization contract as the schedule cache itself."""
+    memo_key = (csr_content_digest(a1),
+                None if width_cap is None else int(width_cap))
+    memo = getattr(dsched, "_op1_pack_memo", None)
+    if memo is not None and memo[0] == memo_key:
+        return memo[1]
+    packed = _op1_ell_build(a1, dsched, width_cap)
+    object.__setattr__(dsched, "_op1_pack_memo", (memo_key, packed))
+    return packed
+
+
+def _op1_ell_build(a1: CSR, dsched: DeviceSchedule, width_cap: int | None):
     t_pad = dsched.t_pad
     n_t = dsched.n_tiles0
-    counts = np.diff(a1.indptr)
-    w = int(counts.max()) if counts.size else 1
-    w = max(w, 1)
+    i_lens = np.asarray(dsched.i_lens, dtype=np.int64)
+    w_cap = int(width_cap) if width_cap is not None else None
+    if not int(i_lens.sum()):
+        w = 1 if w_cap is None else max(min(w_cap, 1), 1)
+        return (np.zeros((n_t, t_pad, w), np.int32),
+                np.zeros((n_t, t_pad, w), np.float32),
+                np.zeros(0, np.int64), np.zeros(0, np.int32),
+                np.zeros(0, np.float32))
+    tile_of, k_of = ell_slot_coords(i_lens)         # ranges concatenated
+    rows = np.asarray(dsched.i_starts, np.int64)[tile_of] + k_of
+    hell = HybridELL.from_csr_rows(
+        a1, rows, cap=w_cap if w_cap is not None else a1.n_cols)
+    w = hell.width
     cols = np.zeros((n_t, t_pad, w), np.int32)
     vals = np.zeros((n_t, t_pad, w), np.float32)
-    i_lens = np.asarray(dsched.i_lens, dtype=np.int64)
-    if int(i_lens.sum()):
-        tile_of, k_of = ell_slot_coords(i_lens)     # ranges concatenated
-        rows = np.asarray(dsched.i_starts, np.int64)[tile_of] + k_of
-        flat, lens = csr_gather_rows(a1, rows)
-        if flat.size:
-            row_rep, w_idx = ell_slot_coords(lens)
-            cols[tile_of[row_rep], k_of[row_rep], w_idx] = a1.indices[flat]
-            vals[tile_of[row_rep], k_of[row_rep], w_idx] = \
-                a1.data[flat].astype(np.float32)
-    return cols, vals
+    cols[tile_of, k_of] = hell.cols
+    vals[tile_of, k_of] = hell.vals.astype(np.float32)
+    sr = hell.spill_rows.astype(np.int64)           # packed-row index
+    spill_flat = tile_of[sr] * np.int64(t_pad) + k_of[sr]
+    return (cols, vals, spill_flat, hell.spill_cols,
+            hell.spill_vals.astype(np.float32))
 
 
 def fused_spmm_spmm(dsched: DeviceSchedule, a1: CSR, c: jax.Array) -> jax.Array:
-    cols, vals = _op1_ell(a1, dsched)
+    cols, vals, spill_flat, spill_cols, spill_vals = _op1_ell(
+        a1, dsched, width_cap=dsched.width_cap)
+    n_t, t_pad = dsched.n_tiles0, dsched.t_pad
+    c_col = c.shape[1]
+    # spill delta on the flattened padded D1 tiles, zero when nothing spills
+    d1_spill = jnp.zeros((n_t * t_pad, c_col), c.dtype)
+    if spill_flat.size:
+        d1_spill = _spill_add(d1_spill, jnp.asarray(spill_flat),
+                              jnp.asarray(spill_cols),
+                              jnp.asarray(spill_vals, c.dtype), c)
     return _fused_spmm_spmm_impl(
         c, jnp.asarray(dsched.i_starts), jnp.asarray(cols),
-        jnp.asarray(vals, c.dtype),
+        jnp.asarray(vals, c.dtype), d1_spill.reshape(n_t, t_pad, c_col),
         jnp.asarray(dsched.j_rows0), jnp.asarray(dsched.ell_cols0),
         jnp.asarray(dsched.ell_vals0, c.dtype),
         jnp.asarray(dsched.j_rows1), jnp.asarray(dsched.ell_cols1),
         jnp.asarray(dsched.ell_vals1, c.dtype),
+        *_wf1_spill_args(dsched, c.dtype),
         t_pad=dsched.t_pad, n_i=dsched.n_i, n_j=dsched.n_j)
 
 
 # --------------------------------------------------------------------------
 # Unfused baselines (two separate routines, D1 round-trips memory)
 # --------------------------------------------------------------------------
-def csr_to_ell(a: CSR):
-    ell = TileELL.from_csr_rows(a, np.arange(a.n_rows))
-    return jnp.asarray(ell.cols), jnp.asarray(ell.vals, jnp.float32)
+def csr_to_ell(a: CSR, width_cap: int | None = None):
+    """Full-matrix hybrid ELL (the unfused executor's format).
+
+    Returns the 5-tuple ``(cols, vals, spill_rows, spill_cols, spill_vals)``
+    of device arrays; with ``width_cap=None`` the body is pad-to-max and the
+    spill lanes are empty (the pre-hybrid layout)."""
+    hell = HybridELL.from_csr_rows(
+        a, np.arange(a.n_rows),
+        cap=width_cap if width_cap is not None else max(a.n_cols, 1))
+    return (jnp.asarray(hell.cols), jnp.asarray(hell.vals, jnp.float32),
+            jnp.asarray(hell.spill_rows), jnp.asarray(hell.spill_cols),
+            jnp.asarray(hell.spill_vals, jnp.float32))
 
 
 @jax.jit
@@ -202,15 +272,25 @@ def spmm_ell(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
 
 
 @jax.jit
-def unfused_gemm_spmm(cols, vals, b, c):
-    d1 = b @ c
-    return spmm_ell(cols, vals, d1)
+def spmm_hybrid(cols, vals, srows, scols, svals, x):
+    """Hybrid-ELL SpMM: capped body pass + spill-lane scatter-add."""
+    d = _ell_rows(cols, vals.astype(x.dtype), x)
+    if srows.shape[0]:
+        d = _spill_add(d, srows, scols, svals, x)
+    return d
 
 
 @jax.jit
-def unfused_spmm_spmm(cols_a, vals_a, cols_a1, vals_a1, c):
-    d1 = spmm_ell(cols_a1, vals_a1, c)
-    return spmm_ell(cols_a, vals_a, d1)
+def unfused_gemm_spmm(cols, vals, srows, scols, svals, b, c):
+    d1 = b @ c
+    return spmm_hybrid(cols, vals, srows, scols, svals, d1)
+
+
+@jax.jit
+def unfused_spmm_spmm(cols_a, vals_a, srows_a, scols_a, svals_a,
+                      cols_a1, vals_a1, srows_a1, scols_a1, svals_a1, c):
+    d1 = spmm_hybrid(cols_a1, vals_a1, srows_a1, scols_a1, svals_a1, c)
+    return spmm_hybrid(cols_a, vals_a, srows_a, scols_a, svals_a, d1)
 
 
 # --------------------------------------------------------------------------

@@ -18,7 +18,7 @@ from typing import List
 
 import numpy as np
 
-from ..sparse.formats import CSR, TileELL
+from ..sparse.formats import CSR, HybridELL, TileELL
 from .schedule import DeviceSchedule
 from .scheduler import Schedule, Tile
 
@@ -229,6 +229,33 @@ def tile_ell_from_csr_rows_ref(a: CSR, rows: np.ndarray,
         cols[k, : c.shape[0]] = c
         vals[k, : v.shape[0]] = v
     return TileELL(cols=cols, vals=vals)
+
+
+def hybrid_ell_from_csr_rows_ref(a: CSR, rows: np.ndarray,
+                                 cap: int | None = None) -> HybridELL:
+    """Row-at-a-time ``HybridELL.from_csr_rows`` (pins the vectorized
+    packer; spill entries appear in row order, tail slots in column order)."""
+    from ..sparse.formats import hybrid_width_cap
+    rows = np.asarray(rows, dtype=np.int64)
+    counts = (a.indptr[rows + 1] - a.indptr[rows]).astype(np.int64)
+    if cap is None:
+        cap = hybrid_width_cap(counts)
+    w_max = int(counts.max()) if rows.size else 1
+    w = max(min(int(cap), max(w_max, 1)), 1)
+    cols = np.zeros((rows.shape[0], w), dtype=np.int32)
+    vals = np.zeros((rows.shape[0], w), dtype=np.float64)
+    s_rows, s_cols, s_vals = [], [], []
+    for k, r in enumerate(rows):
+        c, v = a.row(int(r))
+        cols[k, : min(c.shape[0], w)] = c[:w]
+        vals[k, : min(v.shape[0], w)] = v[:w]
+        for cc, vv in zip(c[w:], v[w:]):
+            s_rows.append(k); s_cols.append(int(cc)); s_vals.append(vv)
+    return HybridELL(
+        cols=cols, vals=vals,
+        spill_rows=np.asarray(s_rows, np.int32),
+        spill_cols=np.asarray(s_cols, np.int32),
+        spill_vals=np.asarray(s_vals, np.float64))
 
 
 def op1_ell_ref(a1: CSR, dsched: DeviceSchedule):

@@ -33,10 +33,20 @@ class DeviceSchedule:
     j_rows0: np.ndarray       # (T0, j0_max) int32, pad = n_j
     ell_cols0: np.ndarray     # (T0, j0_max, w0) int32, tile-LOCAL, pad 0
     ell_vals0: np.ndarray     # (T0, j0_max, w0) f32, pad 0
-    # wavefront 1
+    # wavefront 1 (hybrid: body ELL capped at width_cap + COO spill lanes)
     j_rows1: np.ndarray       # (T1, j1_max) int32, pad = n_j
     ell_cols1: np.ndarray     # (T1, j1_max, w1) int32, GLOBAL, pad 0
     ell_vals1: np.ndarray     # (T1, j1_max, w1) f32, pad 0
+    #: Hub-row tails past ``width_cap``, as flat COO over (D row, D1 row):
+    #: executors apply them with one scatter-add after the wf1 body pass.
+    #: Empty when ``width_cap`` is None (pad-to-max packing, pre-cap layout).
+    spill_rows1: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))   # global D row
+    spill_cols1: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))   # global D1 row
+    spill_vals1: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float32))
+    width_cap: int | None = None
 
     @property
     def n_tiles0(self) -> int:
@@ -53,13 +63,21 @@ class DeviceSchedule:
         return padded / max(useful, 1.0)
 
     def wf1_unique_deps(self) -> int:
-        """Distinct D1 rows the post-barrier wavefront reads."""
+        """Distinct D1 rows the post-barrier wavefront reads (body + spill,
+        so the count is invariant to the width cap)."""
         valid = self.j_rows1 < self.n_j
-        if not valid.any():
+        parts = []
+        if valid.any():
+            cols = self.ell_cols1[valid]
+            vals = self.ell_vals1[valid]
+            parts.append(cols[vals != 0])
+        if self.spill_cols1.size:
+            # same explicit-zero filter as the body pass, so the count (and
+            # with it the traffic model) stays invariant to the width cap
+            parts.append(self.spill_cols1[self.spill_vals1 != 0])
+        if not parts:
             return 0
-        cols = self.ell_cols1[valid]
-        vals = self.ell_vals1[valid]
-        return int(np.unique(cols[vals != 0]).shape[0])
+        return int(np.unique(np.concatenate(parts)).shape[0])
 
     def hbm_traffic_model(self, b_col: int, c_col: int,
                           dtype_bytes: int = 4) -> dict:
@@ -72,7 +90,8 @@ class DeviceSchedule:
         """
         n_i, n_j = self.n_i, self.n_j
         nnz0 = float((self.ell_vals0 != 0).sum())
-        nnz1 = float((self.ell_vals1 != 0).sum())
+        nnz1 = float((self.ell_vals1 != 0).sum()) \
+            + float((self.spill_vals1 != 0).sum())
         base = (n_i * b_col          # read B
                 + n_j * c_col        # write D
                 + (nnz0 + nnz1) * 2  # A vals + idx
@@ -87,13 +106,24 @@ class DeviceSchedule:
                 "d1_spill_rows": spill}
 
 
-def _ell_arrays(a: CSR, j_rows_list, j_max, pad_row, local_start=None):
+def _ell_arrays(a: CSR, j_rows_list, j_max, pad_row, local_start=None,
+                width_cap=None):
     """Pack ragged per-tile row lists into (T, j_max, w) ELL in one shot.
 
     Flat index arithmetic instead of nested Python loops: every nonzero's
     (tile, slot, width) scatter coordinate is derived from ``indptr`` diffs
     (``csr_gather_rows`` + ``ell_slot_coords``), so packing is O(nnz)
-    regardless of tile count."""
+    regardless of tile count.
+
+    ``width_cap`` bounds the body width (hybrid layout): entries past slot
+    ``width_cap`` of a row come back as flat COO spill lanes
+    ``(spill_rows, spill_cols, spill_vals)`` — global row ids, *global*
+    columns (spill is only used for wavefront 1, after the barrier, where
+    tile-locality no longer applies; ``local_start`` must be None with a
+    cap).  With ``width_cap=None`` the spill arrays are empty and the body
+    is the exact pre-cap pad-to-max layout."""
+    assert width_cap is None or local_start is None, \
+        "capped packing is global-column (wavefront 1) only"
     n_tiles = len(j_rows_list)
     sizes = np.asarray([jr.size for jr in j_rows_list], dtype=np.int64)
     all_j = np.concatenate(j_rows_list).astype(np.int64) if n_tiles \
@@ -101,9 +131,14 @@ def _ell_arrays(a: CSR, j_rows_list, j_max, pad_row, local_start=None):
     row_nnz = (a.indptr[all_j + 1] - a.indptr[all_j]).astype(np.int64) \
         if all_j.size else np.zeros(0, np.int64)
     w = max(int(row_nnz.max()) if row_nnz.size else 0, 1)
+    if width_cap is not None:
+        w = max(min(int(width_cap), w), 1)
     j_rows = np.full((n_tiles, j_max), pad_row, dtype=np.int32)
     cols = np.zeros((n_tiles, j_max, w), dtype=np.int32)
     vals = np.zeros((n_tiles, j_max, w), dtype=np.float32)
+    spill_rows = np.zeros(0, np.int32)
+    spill_cols = np.zeros(0, np.int32)
+    spill_vals = np.zeros(0, np.float32)
     if all_j.size:
         # (tile, slot) of every packed row, then (row, width-slot) per nnz
         tile_of, slot_of = ell_slot_coords(sizes)
@@ -111,16 +146,32 @@ def _ell_arrays(a: CSR, j_rows_list, j_max, pad_row, local_start=None):
         flat, lens = csr_gather_rows(a, all_j)
         if flat.size:
             row_rep, w_idx = ell_slot_coords(lens)
+            body = w_idx < w
+            if not body.all():
+                sp = ~body
+                spill_rows = all_j[row_rep[sp]].astype(np.int32)
+                spill_cols = a.indices[flat[sp]].astype(np.int32)
+                spill_vals = a.data[flat[sp]].astype(np.float32)
+                row_rep, w_idx, flat = row_rep[body], w_idx[body], flat[body]
             tv, sv = tile_of[row_rep], slot_of[row_rep]
             c = a.indices[flat].astype(np.int64)
             if local_start is not None:
                 c = c - np.asarray(local_start, np.int64)[tv]
             cols[tv, sv, w_idx] = c.astype(np.int32)
             vals[tv, sv, w_idx] = a.data[flat].astype(np.float32)
-    return j_rows, cols, vals
+    return j_rows, cols, vals, (spill_rows, spill_cols, spill_vals)
 
 
-def to_device_schedule(a: CSR, sched: Schedule) -> DeviceSchedule:
+def to_device_schedule(a: CSR, sched: Schedule,
+                       width_cap: int | None = None) -> DeviceSchedule:
+    """Pad the host schedule to static shapes.
+
+    ``width_cap`` bounds the wavefront-1 ELL body width (hub rows land in
+    wavefront 1 — their dependencies span tiles — so this is where one
+    max-degree row otherwise inflates the whole (T1, j1_max, w1) block);
+    the capped tails come out as the schedule's COO spill lanes.  Wavefront
+    0's tile-local ELL is never capped: a fused row's width is already
+    bounded by the tile size, and the Pallas kernels consume it as-is."""
     wf0, wf1 = sched.wavefronts
     n_i, n_j = sched.n_i, sched.n_j
 
@@ -129,13 +180,16 @@ def to_device_schedule(a: CSR, sched: Schedule) -> DeviceSchedule:
     i_starts = np.asarray([tl.i_start for tl in wf0], dtype=np.int32)
     i_lens = np.asarray([tl.n_i for tl in wf0], dtype=np.int32)
     starts = np.asarray([tl.i_start for tl in wf0], dtype=np.int32)
-    j_rows0, cols0, vals0 = _ell_arrays(
+    j_rows0, cols0, vals0, _ = _ell_arrays(
         a, [tl.j_rows for tl in wf0], j0_max, pad_row=n_j, local_start=starts)
 
+    spill1 = (np.zeros(0, np.int32), np.zeros(0, np.int32),
+              np.zeros(0, np.float32))
     if wf1:
         j1_max = max(tl.n_j for tl in wf1)
-        j_rows1, cols1, vals1 = _ell_arrays(
-            a, [tl.j_rows for tl in wf1], max(j1_max, 1), pad_row=n_j)
+        j_rows1, cols1, vals1, spill1 = _ell_arrays(
+            a, [tl.j_rows for tl in wf1], max(j1_max, 1), pad_row=n_j,
+            width_cap=width_cap)
     else:
         j_rows1 = np.full((0, 1), n_j, dtype=np.int32)
         cols1 = np.zeros((0, 1, 1), dtype=np.int32)
@@ -146,4 +200,6 @@ def to_device_schedule(a: CSR, sched: Schedule) -> DeviceSchedule:
         i_starts=i_starts, i_lens=i_lens,
         j_rows0=j_rows0, ell_cols0=cols0, ell_vals0=vals0,
         j_rows1=j_rows1, ell_cols1=cols1, ell_vals1=vals1,
+        spill_rows1=spill1[0], spill_cols1=spill1[1], spill_vals1=spill1[2],
+        width_cap=width_cap,
     )

@@ -96,7 +96,8 @@ def _fused_mask(a: CSR, i_start: int, i_end: int, j_candidates: np.ndarray) -> n
 
 def _split_tile(a: CSR, tile: Tile, b_col: int, c_col: int, b_is_sparse: bool,
                 cache_size: float, demoted: list,
-                cost: float | None = None) -> List[Tile]:
+                cost: float | None = None,
+                width_cap: int | None = None) -> List[Tile]:
     """Step-2 recursive split (factor 2) until the Eq-3 cost fits cache_size.
 
     ``cost`` lets the caller pass the tile's already-batched Eq-3 cost so
@@ -104,7 +105,8 @@ def _split_tile(a: CSR, tile: Tile, b_col: int, c_col: int, b_is_sparse: bool,
     compute their own."""
     if cost is None:
         cost = tile_cost_elements(a, tile.i_start, tile.i_end, tile.j_rows,
-                                  b_col, c_col, b_is_sparse)
+                                  b_col, c_col, b_is_sparse,
+                                  width_cap=width_cap)
     if cost <= cache_size or tile.n_i <= 1:
         if cost > cache_size and tile.n_j > 0 and tile.n_i <= 1:
             # cannot shrink the producer side further; shed consumers instead
@@ -122,20 +124,26 @@ def _split_tile(a: CSR, tile: Tile, b_col: int, c_col: int, b_is_sparse: bool,
         demoted.append(spanning)
     lo = Tile(tile.i_start, mid, j_lo)
     hi = Tile(mid, tile.i_end, j_hi)
-    return (_split_tile(a, lo, b_col, c_col, b_is_sparse, cache_size, demoted)
-            + _split_tile(a, hi, b_col, c_col, b_is_sparse, cache_size, demoted))
+    return (_split_tile(a, lo, b_col, c_col, b_is_sparse, cache_size, demoted,
+                        width_cap=width_cap)
+            + _split_tile(a, hi, b_col, c_col, b_is_sparse, cache_size,
+                          demoted, width_cap=width_cap))
 
 
 def _split_wf1_tile(a: CSR, j_rows: np.ndarray, b_col: int, c_col: int,
                     b_is_sparse: bool, cache_size: float,
-                    cost: float | None = None) -> List[Tile]:
+                    cost: float | None = None,
+                    width_cap: int | None = None) -> List[Tile]:
     if cost is None:
-        cost = tile_cost_elements(a, 0, 0, j_rows, b_col, c_col, b_is_sparse)
+        cost = tile_cost_elements(a, 0, 0, j_rows, b_col, c_col, b_is_sparse,
+                                  width_cap=width_cap)
     if cost <= cache_size or j_rows.size <= 1:
         return [Tile(0, 0, j_rows)]
     mid = j_rows.size // 2
-    return (_split_wf1_tile(a, j_rows[:mid], b_col, c_col, b_is_sparse, cache_size)
-            + _split_wf1_tile(a, j_rows[mid:], b_col, c_col, b_is_sparse, cache_size))
+    return (_split_wf1_tile(a, j_rows[:mid], b_col, c_col, b_is_sparse,
+                            cache_size, width_cap=width_cap)
+            + _split_wf1_tile(a, j_rows[mid:], b_col, c_col, b_is_sparse,
+                              cache_size, width_cap=width_cap))
 
 
 def _balance(j_all: np.ndarray, t: int, p: int) -> List[np.ndarray]:
@@ -182,6 +190,7 @@ def build_schedule(
     ct_size: int = 2048,
     b_is_sparse: bool = False,
     uniform_split: bool = False,
+    width_cap: int | None = None,
 ) -> Schedule:
     """Algorithm 1.  ``a`` is the sparse matrix of the *second* operation
     (its pattern defines the iteration DAG: row j of op2 depends on D1 rows
@@ -193,6 +202,11 @@ def build_schedule(
     size is halved *globally* until every tile's cost fits — all tiles share
     one size, so the fused code is a single batched matmul with zero padding
     waste (and maps 1:1 onto the Pallas kernel's uniform grid).
+
+    ``width_cap`` (sparse-B only) makes the Eq-3 cost price the op-1 operand
+    as capped-width hybrid-ELL traffic (padded body + spill lanes) instead of
+    raw nonzeros — the width the executors actually stream.  ``None`` keeps
+    the paper's idealized charge (and the pre-cap schedules bit-for-bit).
     """
     n_i = a.n_cols
     n_j = a.n_rows
@@ -207,7 +221,8 @@ def build_schedule(
         return tile_costs_batch(a, [tl.i_start for tl in wf0],
                                 [tl.i_end for tl in wf0],
                                 [tl.j_rows for tl in wf0],
-                                b_col, c_col, b_is_sparse)
+                                b_col, c_col, b_is_sparse,
+                                width_cap=width_cap)
 
     if uniform_split:
         # ---- Step 2 (uniform variant): halve t globally until it fits ----
@@ -227,7 +242,8 @@ def build_schedule(
         split_wf0 = []
         for tl, cost in zip(wf0, _wf0_costs(wf0)):
             split_wf0.extend(_split_tile(a, tl, b_col, c_col, b_is_sparse,
-                                         cache_size, demoted, cost=cost))
+                                         cache_size, demoted, cost=cost,
+                                         width_cap=width_cap))
 
     j_wf1 = np.concatenate(unfused + demoted) if (unfused or demoted) \
         else np.zeros(0, np.int32)
@@ -235,10 +251,12 @@ def build_schedule(
     chunks = _balance(j_wf1, t, p)
     chunk_costs = tile_costs_batch(a, np.zeros(len(chunks), np.int64),
                                    np.zeros(len(chunks), np.int64),
-                                   chunks, b_col, c_col, b_is_sparse)
+                                   chunks, b_col, c_col, b_is_sparse,
+                                   width_cap=width_cap)
     for chunk, cost in zip(chunks, chunk_costs):
         wf1.extend(_split_wf1_tile(a, chunk, b_col, c_col, b_is_sparse,
-                                   cache_size, cost=cost))
+                                   cache_size, cost=cost,
+                                   width_cap=width_cap))
 
     sched = Schedule(wavefronts=[split_wf0, wf1], n_i=n_i, n_j=n_j, t=t)
     sched.validate()

@@ -26,3 +26,16 @@ def default_interpret() -> bool:
 
 def resolve_interpret(interpret: bool | None) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def compiled_or_forced() -> bool:
+    """Capability gate for dispatching *to* the Pallas kernels: a compiled
+    (Mosaic) lowering exists, or interpret mode was explicitly forced via
+    ``PALLAS_INTERPRET=1`` (CI parity runs).  Interpret mode is never a
+    perf win, so plain CPU/GPU — where ``default_interpret`` silently
+    interprets — does not qualify; it must be opted into.  Owned here so
+    the dispatch gate can never drift from how the kernels themselves
+    resolve their mode."""
+    if os.environ.get("PALLAS_INTERPRET") == "1":
+        return True
+    return jax.default_backend() == "tpu"

@@ -17,6 +17,7 @@ from .flash_attention import flash_attention as _flash_pallas
 from .moe import fused_moe_ffn as _moe_pallas
 from .spmm import spmm_ell as _spmm_pallas
 from .tile_fused_gemm_spmm import tile_fused_gemm_spmm_wf0 as _tf_pallas
+from .tile_fused_spmm_spmm import tile_fused_spmm_spmm_wf0 as _tfss_pallas
 
 #: VMEM budget used by choose_kernel_tile (bytes); ~half of v5e VMEM.
 VMEM_BUDGET = 64 * 1024 * 1024
@@ -48,6 +49,15 @@ def tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, *, t: int,
     if impl == "xla":
         return ref.tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, t=t)
     return _tf_pallas(cols0, vals0, b, c, t=t, interpret=_interpret())
+
+
+def tile_fused_spmm_spmm_wf0(op1_cols, op1_vals, d1_spill, cols0, vals0, c,
+                             *, t: int, impl: str = "pallas"):
+    if impl == "xla":
+        return ref.tile_fused_spmm_spmm_wf0(op1_cols, op1_vals, d1_spill,
+                                            cols0, vals0, c, t=t)
+    return _tfss_pallas(op1_cols, op1_vals, d1_spill, cols0, vals0, c, t=t,
+                        interpret=_interpret())
 
 
 def spmm_ell(cols, vals, x, *, block_rows: int = 256, impl: str = "pallas"):

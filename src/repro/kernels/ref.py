@@ -16,6 +16,24 @@ def tile_fused_gemm_spmm_wf0(cols0, vals0, b, c, *, t: int):
     return d1.astype(b.dtype), rows.astype(b.dtype)
 
 
+def tile_fused_spmm_spmm_wf0(op1_cols, op1_vals, d1_spill, cols0, vals0, c,
+                             *, t: int):
+    """Oracle for kernels.tile_fused_spmm_spmm_wf0."""
+    n_tiles = op1_cols.shape[0]
+    c_col = c.shape[1]
+    # op-1: hybrid ELL body gather over global C, plus the spill delta
+    gathered1 = c[op1_cols]                               # (T, t, w1, c)
+    d1_tiles = jnp.einsum("vtw,vtwc->vtc", op1_vals.astype(jnp.float32),
+                          gathered1.astype(jnp.float32))
+    d1_tiles = d1_tiles + d1_spill.reshape(n_tiles, t, c_col)
+    # fused op: tile-local cols index into the tile's own D1 rows
+    gathered0 = jax.vmap(lambda dt, cc: dt[cc])(d1_tiles, cols0)
+    rows = jnp.einsum("vjw,vjwc->vjc", vals0.astype(jnp.float32),
+                      gathered0.astype(jnp.float32))
+    return (d1_tiles.reshape(n_tiles * t, c_col).astype(c.dtype),
+            rows.astype(c.dtype))
+
+
 def spmm_ell(cols, vals, x):
     return jnp.einsum("iw,iwc->ic", vals.astype(jnp.float32),
                       x[cols].astype(jnp.float32)).astype(x.dtype)

@@ -71,13 +71,76 @@ def test_backend_overrides_agree_spmm_spmm():
     c = rng.standard_normal((256, 8))
     want = fused_ref.unfused_spmm_spmm(a, a, c)
     cj = jnp.asarray(c, jnp.float32)
-    for backend in ("auto", "xla", "unfused"):
+    for backend in api.BACKENDS:          # pallas runs interpret off-TPU
         got = api.tile_fused_matmul(a, a, cj, backend=backend,
                                     cache_size=20_000.0, ct_size=64)
         np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3,
                                    atol=2e-3, err_msg=backend)
-    with pytest.raises(ValueError):       # no Pallas SpMM-SpMM kernel yet
-        api.tile_fused_matmul(a, a, cj, backend="pallas")
+
+
+def test_select_backend_pallas_spmm_spmm(monkeypatch):
+    """Acceptance: an SpMM-SpMM schedule dispatches to the Pallas kernel on
+    capable hardware (interpret mode stands in for TPU in CI), and the auto
+    path executes it end to end."""
+    monkeypatch.setenv("PALLAS_INTERPRET", "1")
+    a = banded_spd(256, 4, seed=6)
+    entry = api.get_schedule(a, b_col=16, c_col=16, b_is_sparse=True,
+                             cache_size=1e8, ct_size=64)
+    assert api.select_backend(entry) == "pallas"
+    rng = np.random.default_rng(6)
+    c = rng.standard_normal((256, 16))
+    got = api.tile_fused_matmul(a, a, jnp.asarray(c, jnp.float32),
+                                backend="auto", cache_size=1e8, ct_size=64)
+    np.testing.assert_allclose(np.asarray(got),
+                               fused_ref.unfused_spmm_spmm(a, a, c),
+                               rtol=2e-3, atol=2e-3)
+    # without the capability (plain CPU, no forced interpret) auto stays xla
+    monkeypatch.delenv("PALLAS_INTERPRET")
+    if not api._pallas_capable():
+        assert api.select_backend(entry) == "xla"
+
+
+def test_width_cap_and_autotune_invalidate_cache():
+    """Changing the width cap or the autotune flag must miss the schedule
+    cache — a capped schedule packs different device arrays, so stale reuse
+    would be a silent wrong-layout bug."""
+    a = powerlaw_graph(256, 5, seed=7)
+    kw = dict(b_col=8, c_col=8, b_is_sparse=True, cache_size=20_000.0)
+    e_auto = api.get_schedule(a, **kw)                      # auto cap
+    assert api.schedule_cache_stats()["misses"] == 1
+    e_pad = api.get_schedule(a, width_cap=None, **kw)       # pad-to-max
+    assert e_pad is not e_auto
+    assert api.schedule_cache_stats()["misses"] == 2
+    e_int = api.get_schedule(a, width_cap=e_auto.width_cap + 3, **kw)
+    assert e_int is not e_auto and e_int is not e_pad
+    assert api.schedule_cache_stats()["misses"] == 3
+    # flipping autotune on is a different entry too (its own sweep key)
+    e_at = api.get_schedule(a, autotune=True, **kw)
+    assert e_at is not e_auto
+    # every knob repeated verbatim is a pure hit: no rebuild, misses flat
+    misses = api.schedule_cache_stats()["misses"]
+    assert api.get_schedule(a, **kw) is e_auto
+    assert api.get_schedule(a, width_cap=None, **kw) is e_pad
+    assert api.get_schedule(a, autotune=True, **kw) is e_at
+    assert api.schedule_cache_stats()["misses"] == misses
+
+
+def test_eviction_counters_monotonic(monkeypatch):
+    """LRU eviction counters only ever grow, across both caches."""
+    monkeypatch.setenv(api.CACHE_ENTRIES_ENV, "2")
+    a = banded_spd(128, 4, seed=8)
+    b = jnp.ones((128, 8), jnp.float32)
+    c = jnp.ones((8, 8), jnp.float32)
+    last = (0, 0)
+    for ct in (16, 32, 64, 128):
+        api.get_schedule(a, b_col=8, c_col=8, ct_size=ct)
+        api.tile_fused_matmul(banded_spd(128, 4, seed=ct), b, c,
+                              backend="unfused", width_cap=ct % 3 or None)
+        stats = api.schedule_cache_stats()
+        cur = (stats["evictions"], stats["ell_evictions"])
+        assert cur >= last
+        last = cur
+    assert last[0] >= 2 and last[1] >= 2  # the tiny budget really evicted
 
 
 def test_cost_model_falls_back_to_unfused():

@@ -1,0 +1,113 @@
+"""HybridELL: packer parity vs the loop reference + hub-row memory bound.
+
+The memory regression test pins the format's reason to exist: on a
+power-law graph with one artificially boosted hub row, the pad-to-max
+packer allocates ``n_rows × max_degree`` (the failing case, asserted
+explicitly), while the hybrid pack stays width-capped and within 1.5× of
+the nonzero count.
+"""
+import numpy as np
+from _prop import given, settings, st
+
+from repro.core.sparse.formats import (CSR, HybridELL, TileELL,
+                                       hybrid_width_cap)
+from repro.core.sparse.random import hub_powerlaw
+from repro.core.tilefusion import api, build_schedule, reference, \
+    to_device_schedule
+from repro.core.tilefusion.cost_model import hybrid_packed_elements
+
+
+def random_csr(n, density, seed):
+    rng = np.random.default_rng(seed)
+    m = max(int(density * n * n), 1)
+    return CSR.from_coo(n, n, rng.integers(0, n, m), rng.integers(0, n, m),
+                        rng.standard_normal(m))
+
+
+# --------------------------------------------------------------------------
+# Satellite: hub-safe memory regression (powerlaw_graph(n=8192) + hub row)
+# --------------------------------------------------------------------------
+def test_hybrid_pack_memory_bounded_on_hub_powerlaw():
+    a = hub_powerlaw(8192, seed=0)
+    counts = np.diff(a.indptr).astype(np.int64)
+    max_deg = int(counts.max())
+    assert max_deg >= 8192 // 2 - 1           # the hub really dominates
+
+    # the failing case first: pad-to-max allocates n × max_degree, blowing
+    # far past the 1.5×-nnz budget the hybrid format is pinned to
+    pad_elements = a.n_rows * max_deg
+    assert pad_elements > 1.5 * a.nnz, \
+        "pad-to-max unexpectedly within budget — hub row lost?"
+
+    cap = hybrid_width_cap(counts)            # traffic-optimal auto cap
+    hell = HybridELL.from_csr_rows(a, np.arange(a.n_rows), cap=cap)
+    assert hell.width <= cap                  # packed width obeys the cap
+    assert hell.packed_elements() <= 1.5 * a.nnz
+    # nothing lost: body nonzero slots + spill lanes account for every entry
+    assert int((hell.vals != 0).sum()) + hell.n_spill == a.nnz
+    # cost-model pricing agrees with the packer's actual footprint
+    spill3 = hybrid_packed_elements(counts, cap) - a.n_rows * hell.width
+    assert spill3 == 3 * hell.n_spill
+
+
+def test_device_schedule_wf1_capped_on_hub_powerlaw():
+    """The width cap reaches the schedule: wavefront-1 ELL body width stays
+    at the cap and the hub tail rides the spill lanes."""
+    a = hub_powerlaw(2048, seed=1)
+    cap = hybrid_width_cap(np.diff(a.indptr))
+    sched = build_schedule(a, b_col=16, c_col=16, p=4, cache_size=50_000.0,
+                           ct_size=128, uniform_split=True)
+    ds_pad = to_device_schedule(a, sched)
+    ds_cap = to_device_schedule(a, sched, width_cap=cap)
+    assert ds_cap.ell_cols1.shape[2] <= cap
+    assert ds_cap.spill_rows1.size > 0
+    assert ds_cap.ell_cols1.size + ds_cap.spill_rows1.size \
+        < ds_pad.ell_cols1.size
+    # the traffic model is cap-invariant (same nonzeros, same D1 spill rows)
+    tm_pad = ds_pad.hbm_traffic_model(16, 16)
+    tm_cap = ds_cap.hbm_traffic_model(16, 16)
+    assert tm_pad["fused_bytes"] == tm_cap["fused_bytes"]
+    assert tm_pad["d1_spill_rows"] == tm_cap["d1_spill_rows"]
+
+
+# --------------------------------------------------------------------------
+# Packer parity: vectorized HybridELL pinned by the loop reference
+# --------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 150), density=st.floats(0.005, 0.1),
+       seed=st.integers(0, 6), cap=st.sampled_from([None, 1, 2, 5, 1000]))
+def test_hybrid_packer_matches_loop_reference(n, density, seed, cap):
+    a = random_csr(n, density, seed)
+    rows = np.arange(a.n_rows, dtype=np.int64)
+    got = HybridELL.from_csr_rows(a, rows, cap=cap)
+    want = reference.hybrid_ell_from_csr_rows_ref(a, rows, cap=cap)
+    assert got.width == want.width
+    assert np.array_equal(got.cols, want.cols)
+    assert np.array_equal(got.vals, want.vals)
+    assert np.array_equal(got.spill_rows, want.spill_rows)
+    assert np.array_equal(got.spill_cols, want.spill_cols)
+    assert np.array_equal(got.spill_vals, want.spill_vals)
+    # uncapped hybrid degenerates to the pad-to-max TileELL body
+    if cap == 1000:
+        tile = TileELL.from_csr_rows(a, rows)
+        assert got.n_spill == 0
+        assert np.array_equal(got.cols, tile.cols)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(16, 120), density=st.floats(0.01, 0.08),
+       seed=st.integers(0, 5))
+def test_op1_ell_matches_loop_reference_uncapped(n, density, seed):
+    """The shared-packer ``_op1_ell`` reproduces the retained loop
+    reference bit-for-bit in the pad-to-max case (no duplicated ELL
+    logic left behind)."""
+    from repro.core.tilefusion import fused_ops
+    a = random_csr(n, density, seed)
+    sched = build_schedule(a, b_col=8, c_col=8, p=2, cache_size=5_000.0,
+                           ct_size=16, b_is_sparse=True, uniform_split=True)
+    ds = to_device_schedule(a, sched)
+    cols, vals, spill_flat, _, _ = fused_ops._op1_ell(a, ds)
+    ref_cols, ref_vals = reference.op1_ell_ref(a, ds)
+    assert spill_flat.size == 0
+    assert np.array_equal(cols, ref_cols)
+    assert np.array_equal(vals, ref_vals)

@@ -31,6 +31,26 @@ def test_tile_fused_gemm_spmm(t, j0, w, bcol, ccol):
     np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), **TOL[jnp.float32])
 
 
+@pytest.mark.parametrize("t,j0,w0,w1,n,ccol", [
+    (128, 16, 8, 4, 256, 16), (64, 8, 4, 1, 128, 8)])
+def test_tile_fused_spmm_spmm(t, j0, w0, w1, n, ccol):
+    T = 3
+    op1_cols = jnp.asarray(RNG.integers(0, n, (T, t, w1)), jnp.int32)
+    op1_vals = arr((T, t, w1))
+    spill = arr((T * t, ccol), scale=0.1)      # pre-accumulated hub tails
+    cols0 = jnp.asarray(RNG.integers(0, t, (T, j0, w0)), jnp.int32)
+    vals0 = arr((T, j0, w0))
+    c = arr((n, ccol))
+    d1k, rk = ops.tile_fused_spmm_spmm_wf0(op1_cols, op1_vals, spill,
+                                           cols0, vals0, c, t=t)
+    d1r, rr = ref.tile_fused_spmm_spmm_wf0(op1_cols, op1_vals, spill,
+                                           cols0, vals0, c, t=t)
+    np.testing.assert_allclose(np.asarray(d1k), np.asarray(d1r),
+                               **TOL[jnp.float32])
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr),
+                               **TOL[jnp.float32])
+
+
 @pytest.mark.parametrize("n,w,c,block", [(256, 4, 8, 64), (512, 9, 16, 128),
                                          (128, 1, 32, 128)])
 def test_spmm_ell(n, w, c, block):

@@ -1,0 +1,107 @@
+"""Cross-backend parity property suite — every (op-pair × backend × pattern).
+
+One parametrized harness pins the whole dispatch matrix: both op pairs
+({GeMM-SpMM, SpMM-SpMM}) × every backend ({pallas (interpret on CPU), xla,
+unfused, reference}) × the pattern zoo ({banded, blockdiag, powerlaw,
+empty-rows, single-hub-row, 1×1}), all asserted allclose against the
+``fused_ref`` numpy oracle.  The hybrid width cap is left at its "auto"
+default so every cell — including the single-hub-row power-law case —
+exercises the capped body + spill-lane path.
+
+Runs under ``tests/_prop.py``: real hypothesis when installed, a seeded
+deterministic parametrize sweep otherwise.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.core.sparse.formats import CSR
+from repro.core.sparse.random import (banded_spd, block_diag_noise,
+                                      hub_powerlaw, powerlaw_graph)
+from repro.core.tilefusion import api, fused_ref
+
+#: Explicit override backends plus the numpy schedule-walking oracle.
+BACKENDS = ("pallas", "xla", "unfused", "reference")
+KNOBS = dict(p=2, cache_size=30_000.0, ct_size=32)
+
+
+def _empty_rows(n: int, seed: int) -> CSR:
+    """Banded pattern with every other row (and its columns) zeroed — the
+    vacuously-fusable empty-row edge the extents sentinel must handle."""
+    dense = banded_spd(n, 3, seed=seed).to_dense()
+    dense[::2, :] = 0.0
+    return CSR.from_dense(dense)
+
+
+PATTERNS = {
+    "banded": lambda n, seed: banded_spd(n, 4, seed=seed),
+    "blockdiag": lambda n, seed: block_diag_noise(n, block=32, seed=seed),
+    "powerlaw": lambda n, seed: powerlaw_graph(n, 5, seed=seed),
+    "empty-rows": _empty_rows,
+    # one artificially boosted max-degree row: pad-to-max width explodes
+    # and the hybrid spill lanes must carry the tail
+    "single-hub-row": lambda n, seed: hub_powerlaw(n, 4, seed=seed),
+    "1x1": lambda n, seed: CSR.from_dense(np.ones((1, 1))),
+}
+
+
+def _run_cell(a: CSR, op_pair: str, backend: str, c_col: int,
+              rng) -> tuple:
+    """Execute one matrix cell; returns (got, want) numpy arrays."""
+    n = a.n_rows
+    c_sp = rng.standard_normal((n, c_col))
+    b = rng.standard_normal((n, 8))
+    c_ge = rng.standard_normal((8, c_col))
+    if backend == "reference":
+        entry = api.get_schedule(a, b_col=c_col if op_pair == "spmm" else 8,
+                                 c_col=c_col,
+                                 b_is_sparse=(op_pair == "spmm"), **KNOBS)
+        if op_pair == "spmm":
+            got = fused_ref.run_spmm_spmm(a, a, c_sp, entry.sched, check=True)
+            want = fused_ref.unfused_spmm_spmm(a, a, c_sp)
+        else:
+            got = fused_ref.run_gemm_spmm(a, b, c_ge, entry.sched, check=True)
+            want = fused_ref.unfused_gemm_spmm(a, b, c_ge)
+        return np.asarray(got), want
+    if op_pair == "spmm":
+        got = api.tile_fused_matmul(a, a, jnp.asarray(c_sp, jnp.float32),
+                                    backend=backend, **KNOBS)
+        want = fused_ref.unfused_spmm_spmm(a, a, c_sp)
+    else:
+        got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                                    jnp.asarray(c_ge, jnp.float32),
+                                    backend=backend, **KNOBS)
+        want = fused_ref.unfused_gemm_spmm(a, b, c_ge)
+    return np.asarray(got), want
+
+
+@pytest.mark.parametrize("pattern", sorted(PATTERNS))
+@pytest.mark.parametrize("op_pair", ["gemm", "spmm"])
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 4), c_col=st.sampled_from([4, 8]))
+def test_parity_cell(op_pair, pattern, seed, c_col):
+    a = PATTERNS[pattern](64, seed)
+    rng = np.random.default_rng(1000 * seed + c_col)
+    for backend in BACKENDS:
+        got, want = _run_cell(a, op_pair, backend, c_col, rng)
+        np.testing.assert_allclose(
+            got, want, rtol=2e-3, atol=2e-3,
+            err_msg=f"{op_pair}/{backend}/{pattern}/seed{seed}")
+
+
+def test_hub_row_spills_under_auto_cap():
+    """The single-hub-row cell really exercises the spill lanes: the auto
+    width cap is far below the hub degree, so the schedule (or the op-1
+    pack) must carry spill entries — and parity above proves they land."""
+    a = hub_powerlaw(96, 4, seed=0)
+    api.clear_schedule_cache()
+    entry = api.get_schedule(a, b_col=8, c_col=8, b_is_sparse=True, **KNOBS)
+    counts = np.diff(a.indptr)
+    assert entry.width_cap is not None
+    assert entry.width_cap < int(counts.max())
+    ds = entry.dsched
+    from repro.core.tilefusion import fused_ops
+    _, _, spill_flat, _, _ = fused_ops._op1_ell(a, ds,
+                                                width_cap=ds.width_cap)
+    assert ds.spill_rows1.size + spill_flat.size > 0
