@@ -6,7 +6,6 @@ configurations; TPU perf is the §Roofline analysis.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -21,6 +21,7 @@ MODULES = [
     "inspector_bench",
     "reorder_ablation",
     "kernels_bench",
+    "sharded_scaling",
 ]
 
 

@@ -1,0 +1,77 @@
+"""Sharded tile-fusion driver: the wavefront-0 grid over a device mesh.
+
+On this CPU container the "mesh" is whatever the host platform exposes
+(force more with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` —
+the CI multi-device leg does); a 1-device platform exercises the
+trivial-mesh fallback, so the driver never bit-rots regardless of the
+environment.  Timings on forced host devices are NOT accelerator
+performance — the derived columns that matter are the partition balance and
+the halo-vs-replication byte ratio from ``cost_model.shard_comm_model``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.sparse.random import banded_spd, powerlaw_graph
+from repro.core.tilefusion import api, fused_ref
+
+from .util import bench_n, time_fn
+
+
+def _mesh() -> Mesh:
+    return Mesh(np.array(jax.devices()), ("shards",))
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(11)
+    mesh = _mesh()
+    n_dev = len(jax.devices())
+    bcol = 32
+    n = bench_n(4096)
+    knobs = dict(p=8, cache_size=100_000.0, ct_size=256)
+    mats = {"banded_spd_b8": banded_spd(n, 8, seed=11),
+            "powerlaw_d4": powerlaw_graph(n, 4, seed=11)}
+    for name, a in mats.items():
+        b = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
+        want = fused_ref.unfused_gemm_spmm(a, np.asarray(b, np.float64),
+                                           np.asarray(c, np.float64))
+        for backend, kw in (("xla", {}), ("sharded", {"mesh": mesh})):
+            t_us = time_fn(api.tile_fused_matmul, a, b, c,
+                           backend=backend, **kw, **knobs)
+            got = api.tile_fused_matmul(a, b, c, backend=backend, **kw,
+                                        **knobs)
+            err = float(np.abs(np.asarray(got) - want).max())
+            derived = f"devices={n_dev};max_err={err:.2e}"
+            if backend == "sharded":
+                entry = api.get_schedule(a, b_col=bcol, c_col=bcol,
+                                         mesh=mesh, **knobs)
+                if entry.shard is not None:
+                    cm = entry.shard.comm_model
+                    counts = entry.shard.shard_tile_counts()
+                    derived += (f";halo_rows={cm['halo_rows']}"
+                                f";halo_frac={cm['halo_fraction']:.3f}"
+                                f";tiles_per_shard="
+                                f"{int(counts.min())}-{int(counts.max())}")
+                else:
+                    derived += ";trivial_mesh_fallback"
+            rows.append((f"sharded/gemm_spmm/{name}/{backend}", t_us,
+                         derived))
+        # SpMM-SpMM on the powerlaw pattern only (op-1 == A, paper setting)
+        if name != "powerlaw_d4":
+            continue
+        cs = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
+        want2 = fused_ref.unfused_spmm_spmm(a, a, np.asarray(cs, np.float64))
+        for backend, kw in (("xla", {}), ("sharded", {"mesh": mesh})):
+            t_us = time_fn(api.tile_fused_matmul, a, a, cs,
+                           backend=backend, **kw, **knobs)
+            got = api.tile_fused_matmul(a, a, cs, backend=backend, **kw,
+                                        **knobs)
+            err = float(np.abs(np.asarray(got) - want2).max())
+            rows.append((f"sharded/spmm_spmm/{name}/{backend}", t_us,
+                         f"devices={n_dev};max_err={err:.2e}"))
+    return rows

@@ -8,8 +8,6 @@ but a few hundred steps of that is not a reasonable single-CPU-core demo;
 the dry-run cells cover the large-scale path.)
 """
 import argparse
-import dataclasses
-import sys
 
 from repro.configs.base import ModelConfig
 from repro.configs import _MODULES  # registry

@@ -48,9 +48,21 @@ oldest-first instead of growing without bound.
 ``schedule_cache_stats()`` reports hits/misses/evictions plus live entry
 counts of both caches.
 
+**Sharded dispatch (``mesh=``).**  Passing a non-trivial
+``jax.sharding.Mesh`` partitions the wavefront-0 fused-tile grid 1-D
+row-block over the mesh's flattened devices, contiguous tile groups
+balanced by their Eq-3 cost; the per-shard executor runs under ``shard_map``
+(wavefront 0 is communication-free by the fusion criterion), the
+wavefront-1 halo rows are all-gathered, and the disjoint partial outputs
+psum-combined.  The mesh's (axis names, shape) joins the schedule-cache
+key, ``schedule_cache_stats()`` reports the mesh-keyed entries as
+``mesh_entries``, and a trivial mesh falls back to single-device dispatch.
+CPU CI exercises the real multi-device path via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  See ``sharded.py``.
+
 Everything outside ``core/tilefusion`` (models, examples, benchmarks) routes
-through this module; later PRs extend the seam (sharded dispatch, GPU
-backend) without touching call sites.
+through this module; later PRs extend the seam (GPU backend, 2-D shard
+partitions) without touching call sites.
 """
 from __future__ import annotations
 
@@ -67,12 +79,22 @@ import numpy as np
 
 from ..sparse.formats import (CSR, DEFAULT_WIDTH_QUANTILE,
                               csr_content_digest, hybrid_width_cap)
-from . import cost_model, fused_ops
+from . import cost_model, fused_ops, sharded
 from .schedule import DeviceSchedule, to_device_schedule
 from .scheduler import Schedule, build_schedule
 
+
+def _mesh_size(mk: tuple | None) -> int:
+    """Device count encoded in a ``sharded.mesh_key`` (1 for None)."""
+    if mk is None:
+        return 1
+    size = 1
+    for s in mk[1]:
+        size *= int(s)
+    return size
+
 #: Valid ``backend=`` values for tile_fused_matmul.
-BACKENDS = ("auto", "pallas", "xla", "unfused")
+BACKENDS = ("auto", "pallas", "xla", "unfused", "sharded")
 
 #: Below this Eq-2 fused ratio the schedule fuses so little that the fused
 #: executor's padding/scatter overhead cannot pay for itself — dispatch to
@@ -126,6 +148,14 @@ class ScheduleEntry:
     #: resolved hybrid-ELL width cap the schedule was packed with (None =
     #: pad-to-max); part of the cache key, consumed by the executors
     width_cap: int | None = None
+    #: ``sharded.mesh_key`` of the mesh this entry was inspected for (None
+    #: for single-device entries); part of the cache key — the same matrix
+    #: on a different mesh shape is a different schedule
+    mesh_key: tuple | None = None
+    #: per-shard restructuring (``sharded.ShardedSchedule``) when the entry
+    #: was built for a non-trivial mesh and the grid is uniform; None means
+    #: dispatch falls back to single-device execution
+    shard: object = None
 
 
 _schedule_cache: "collections.OrderedDict" = collections.OrderedDict()
@@ -234,7 +264,8 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                  cache_size: float = 600_000.0, ct_size: int = 2048,
                  b_is_sparse: bool = False, uniform_split: bool = True,
                  autotune: bool = False,
-                 width_cap: int | str | None = "auto") -> ScheduleEntry:
+                 width_cap: int | str | None = "auto",
+                 mesh=None) -> ScheduleEntry:
     """Run Algorithm 1 once per (content, tile size, cache budget) and
     memoize; subsequent calls with the same key return the cached entry
     without touching the scheduler.
@@ -254,16 +285,25 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     op-1 packing and Eq-3 op-1 pricing when ``b_is_sparse``): ``"auto"``
     (default) picks the traffic-optimal cap from the degree distribution,
     ``None`` disables capping (pad-to-max).  The resolved cap is part of
-    the cache key — changing it can never reuse a stale schedule."""
+    the cache key — changing it can never reuse a stale schedule.
+
+    ``mesh`` (a ``jax.sharding.Mesh``) additionally partitions the
+    wavefront-0 tile grid over the mesh's devices (1-D row-block,
+    Eq-3-balanced) and attaches the per-shard arrays + halo index sets as
+    ``entry.shard``.  The mesh's (axis names, shape) joins the cache key:
+    the same matrix on a different mesh shape re-inspects.  A trivial
+    (single-device or None) mesh keys and dispatches exactly like no
+    mesh."""
     cap = _resolve_width_cap(a, width_cap)
+    mk = sharded.mesh_key(mesh)
     if autotune:
         return _autotune_schedule(a, b_col=b_col, c_col=c_col, p=p,
                                   cache_size=cache_size, ct_size=ct_size,
                                   b_is_sparse=b_is_sparse,
                                   uniform_split=uniform_split,
-                                  width_cap=cap)
+                                  width_cap=cap, mesh_k=mk)
     key = (_content_key(a), b_col, c_col, p, float(cache_size), ct_size,
-           b_is_sparse, uniform_split, cap)
+           b_is_sparse, uniform_split, cap, mk)
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None:
@@ -278,10 +318,18 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     dsched = to_device_schedule(a, sched, width_cap=cap)
     tm = dsched.hbm_traffic_model(b_col, c_col)
     tm["packed_ell_bytes"] = _packed_ell_bytes(a, dsched, b_is_sparse)
+    shard = None
+    if mk is not None:
+        shard = sharded.build_sharded_schedule(
+            a, sched, dsched, _mesh_size(mk), b_col=b_col, c_col=c_col,
+            b_is_sparse=b_is_sparse, width_cap=cap)
+        if shard is not None:
+            tm["sharded"] = shard.comm_model
     entry = ScheduleEntry(sched=sched, dsched=dsched, b_col=b_col,
                           c_col=c_col, b_is_sparse=b_is_sparse,
                           inspector_s=time.perf_counter() - t0,
-                          traffic_model=tm, width_cap=cap)
+                          traffic_model=tm, width_cap=cap,
+                          mesh_key=mk, shard=shard)
     with _lock:
         _stats["misses"] += 1
         _cache_put(_schedule_cache, key, entry)
@@ -290,8 +338,8 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
 
 def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
                        cache_size: float, ct_size: int, b_is_sparse: bool,
-                       uniform_split: bool,
-                       width_cap: int | None) -> ScheduleEntry:
+                       uniform_split: bool, width_cap: int | None,
+                       mesh_k: tuple | None = None) -> ScheduleEntry:
     """Eq-3 tile-size × width-cap sweep, memoized under its own entry.
 
     Candidates: (AUTOTUNE_CT_GRID ∪ {ct_size, 2048}) × AUTOTUNE_CACHE_SCALES
@@ -304,7 +352,7 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
     heuristic, never regress it.
     """
     key = ("autotune", _content_key(a), b_col, c_col, p, float(cache_size),
-           ct_size, b_is_sparse, uniform_split, width_cap)
+           ct_size, b_is_sparse, uniform_split, width_cap, mesh_k)
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None:
@@ -353,6 +401,17 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
     best = dataclasses.replace(eligible[best_key], hits=0,
                                autotuned=best_key,
                                inspector_s=time.perf_counter() - t0)
+    if mesh_k is not None:
+        # the sweep's candidates are mesh-free; shard the winner (a fresh
+        # traffic_model dict so the single-device candidate stays untouched)
+        shard = sharded.build_sharded_schedule(
+            a, best.sched, best.dsched, _mesh_size(mesh_k), b_col=b_col,
+            c_col=c_col, b_is_sparse=b_is_sparse, width_cap=best.width_cap)
+        tm = dict(best.traffic_model)
+        if shard is not None:
+            tm["sharded"] = shard.comm_model
+        best = dataclasses.replace(best, mesh_key=mesh_k, shard=shard,
+                                   traffic_model=tm)
     with _lock:
         # first-wins publish: a concurrent sweep on the same key may have
         # finished while we ran (the candidates it used were memoized, so
@@ -393,10 +452,15 @@ def clear_schedule_cache() -> None:
 
 
 def schedule_cache_stats() -> dict:
-    """Counters plus live entry counts of both process-wide caches."""
+    """Counters plus live entry counts of both process-wide caches.
+    ``mesh_entries`` counts the live schedule entries inspected for a
+    non-trivial mesh (the sharded-dispatch tier's cache footprint)."""
     with _lock, _ell_lock:
+        mesh_entries = sum(1 for e in _schedule_cache.values()
+                           if e.mesh_key is not None)
         return dict(_stats, entries=len(_schedule_cache),
-                    ell_entries=len(_ell_cache))
+                    ell_entries=len(_ell_cache),
+                    mesh_entries=mesh_entries)
 
 
 # --------------------------------------------------------------------------
@@ -435,6 +499,12 @@ def _spmm_pallas_fits_vmem(entry: ScheduleEntry, c_col: int) -> bool:
 def select_backend(entry: ScheduleEntry) -> str:
     """Resolve ``backend="auto"`` for an inspected schedule."""
     tm = entry.traffic_model
+    if entry.shard is not None:
+        # the entry was inspected for a non-trivial mesh (>1 device) and the
+        # grid partitioned; honoring the mesh outranks every local backend,
+        # including the unfused fallback — even a fusion-free schedule still
+        # distributes op-1 rows and wavefront-1 work across the devices
+        return "sharded"
     if (entry.sched.fused_ratio < MIN_FUSED_RATIO
             or tm["traffic_saving"] <= 0.0):
         # pathological pattern: fusion saves no traffic — Eq 3 says the
@@ -537,7 +607,8 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
                       p: int = 8, cache_size: float = 600_000.0,
                       ct_size: int = 2048, uniform_split: bool = True,
                       autotune: bool = False,
-                      width_cap: int | str | None = "auto") -> jax.Array:
+                      width_cap: int | str | None = "auto",
+                      mesh=None) -> jax.Array:
     """``D = a @ (b_or_a1 @ c)`` through the tile-fusion schedule.
 
     Args:
@@ -546,8 +617,9 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
         SpMM-SpMM (op-1 rows gathered per tile).
       c: dense ``(b_col, c_col)`` (GeMM-SpMM) / ``(n, c_col)`` (SpMM-SpMM).
       backend: "auto" (Eq-3 cost model + capability), or an explicit
-        "pallas" / "xla" / "unfused" override for benchmarks.  Both op
-        pairs lower to "pallas" (SpMM-SpMM via the hybrid op-1 gather).
+        "pallas" / "xla" / "unfused" / "sharded" override for benchmarks.
+        Both op pairs lower to "pallas" (SpMM-SpMM via the hybrid op-1
+        gather) and to "sharded" (shard_map over ``mesh``).
       p, cache_size, ct_size, uniform_split: Algorithm-1 knobs, part of the
         schedule-cache key.
       autotune: sweep the Eq-3 tile-size × width-cap grid instead of using
@@ -555,6 +627,14 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
       width_cap: hybrid-ELL body width cap — "auto" (traffic-optimal from
         the degree distribution), an explicit int, or None for pad-to-max.
         Part of the schedule/ELL cache keys.
+      mesh: a ``jax.sharding.Mesh`` to distribute over — the wavefront-0
+        tile grid is partitioned 1-D row-block across the mesh's flattened
+        devices (Eq-3-balanced), wavefront 1 reads an all-gathered halo,
+        and ``backend="auto"`` dispatches to the sharded executors.  On a
+        CPU host, force a multi-device platform with
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  A trivial
+        mesh (one device, or ``mesh=None``) falls back to single-device
+        dispatch — including for ``backend="sharded"``.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend={backend!r}; expected one of {BACKENDS}")
@@ -581,11 +661,21 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
     entry = get_schedule(a, b_col=b_col, c_col=c.shape[1], p=p,
                          cache_size=cache_size, ct_size=ct_size,
                          b_is_sparse=b_is_sparse, uniform_split=uniform_split,
-                         autotune=autotune, width_cap=width_cap)
+                         autotune=autotune, width_cap=width_cap, mesh=mesh)
     chosen = select_backend(entry) if backend == "auto" else backend
 
+    if chosen == "sharded" and entry.shard is None:
+        # trivial mesh (or a non-uniform grid): single-device fallback —
+        # the XLA executor is the sharded path's one-device twin
+        chosen = "xla"
     if chosen == "unfused":
         return run_unfused()
+    if chosen == "sharded":
+        if b_is_sparse:
+            return sharded.sharded_spmm_spmm(entry.shard, entry.dsched,
+                                             mesh, b_or_a1, c)
+        return sharded.sharded_gemm_spmm(entry.shard, mesh,
+                                         jnp.asarray(b_or_a1), c)
     if b_is_sparse:
         if chosen == "pallas":
             return _spmm_spmm_pallas(entry, b_or_a1, c)

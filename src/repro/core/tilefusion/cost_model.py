@@ -184,6 +184,51 @@ def tile_costs_batch(
     return ((nz + uc + t + sizes) * c_col + idx).astype(np.float64)
 
 
+def shard_comm_model(n_shards: int, halo_rows: int, n_i: int, c_col: int,
+                     dtype_bytes: int = 4, n_j: int | None = None) -> dict:
+    """Communication terms of the sharded dispatch (1-D row-block partition
+    of the wavefront-0 tile grid over ``n_shards`` devices).
+
+    Wavefront 0 is communication-free (the fusion criterion makes every
+    fused row's dependencies tile-local, hence shard-local).  Two
+    cross-shard transfers remain, both priced here:
+
+      ``halo_bytes``       all-gather of just the wavefront-1 halo — the
+                           ``halo_rows`` D1 rows the post-barrier wavefront
+                           reads: every device receives the (S-1)/S
+                           fraction it doesn't own.
+      ``combine_bytes``    the output combine: each shard's rows of D are
+                           disjoint but scattered (fused rows follow the
+                           pattern, not contiguous blocks), so the
+                           executors all-reduce the full ``(n_j, c_col)``
+                           partial — the dominant term for small halos.  A
+                           row-remapped reduce-scatter would cut this to
+                           D's own bytes; open item in the ROADMAP.
+      ``replicate_bytes``  the 1.5D-style alternative to the halo exchange
+                           — all-gather the full D1 so wavefront 1 needs
+                           no index sets (or, equivalently, replicate op-1
+                           compute).
+
+    ``halo_fraction`` (halo / full D1) is the exchange-strategy decision
+    variable: a near-1 fraction says the pattern scatters its wavefront-1
+    deps so widely that replication costs the same bytes and saves the
+    index bookkeeping."""
+    s = max(int(n_shards), 1)
+    remote = (s - 1) / s
+    halo = float(halo_rows) * c_col * dtype_bytes * remote * s
+    full = float(n_i) * c_col * dtype_bytes * remote * s
+    combine = float(n_i if n_j is None else n_j) * c_col * dtype_bytes \
+        * remote * s
+    return {
+        "n_shards": s,
+        "halo_rows": int(halo_rows),
+        "halo_bytes": halo,
+        "combine_bytes": combine,
+        "replicate_bytes": full,
+        "halo_fraction": float(halo_rows) / max(n_i, 1),
+    }
+
+
 def tile_cost_bytes(a, i_start, i_end, j_rows, b_col, c_col, b_is_sparse,
                     dtype_bytes: int = 4) -> float:
     return tile_cost_elements(a, i_start, i_end, j_rows, b_col, c_col,

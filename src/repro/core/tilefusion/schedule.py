@@ -62,9 +62,11 @@ class DeviceSchedule:
         padded = float(self.n_tiles0 * self.t_pad) * b_col * c_col
         return padded / max(useful, 1.0)
 
-    def wf1_unique_deps(self) -> int:
-        """Distinct D1 rows the post-barrier wavefront reads (body + spill,
-        so the count is invariant to the width cap)."""
+    def wf1_dep_rows(self) -> np.ndarray:
+        """Sorted distinct D1 rows the post-barrier wavefront reads (body +
+        spill).  This is the *halo* of the schedule: under a sharded
+        partition these are the only rows that must cross device
+        boundaries, so the sharded executors all-gather exactly this set."""
         valid = self.j_rows1 < self.n_j
         parts = []
         if valid.any():
@@ -76,8 +78,13 @@ class DeviceSchedule:
             # with it the traffic model) stays invariant to the width cap
             parts.append(self.spill_cols1[self.spill_vals1 != 0])
         if not parts:
-            return 0
-        return int(np.unique(np.concatenate(parts)).shape[0])
+            return np.zeros(0, np.int64)
+        return np.unique(np.concatenate(parts)).astype(np.int64)
+
+    def wf1_unique_deps(self) -> int:
+        """Distinct D1 rows the post-barrier wavefront reads (body + spill,
+        so the count is invariant to the width cap)."""
+        return int(self.wf1_dep_rows().shape[0])
 
     def hbm_traffic_model(self, b_col: int, c_col: int,
                           dtype_bytes: int = 4) -> dict:

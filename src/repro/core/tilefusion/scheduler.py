@@ -263,6 +263,50 @@ def build_schedule(
     return sched
 
 
+def balanced_contiguous_partition(costs: np.ndarray,
+                                  n_parts: int) -> np.ndarray:
+    """Split a tile sequence into ``n_parts`` contiguous groups minimizing
+    the max group Eq-3 cost (the shard balance term of the sharded
+    dispatch: every shard gets comparable fused-tile work, and contiguity
+    preserves the 1-D row-block partition of D1).
+
+    Binary search on the bottleneck cost over the prefix sums; returns
+    ``(n_parts + 1,)`` tile-index bounds (trailing groups may be empty when
+    there are fewer tiles than parts).
+    """
+    costs = np.asarray(costs, dtype=np.float64)
+    n = costs.shape[0]
+    bounds = np.zeros(n_parts + 1, dtype=np.int64)
+    if n == 0 or n_parts <= 0:
+        return bounds
+    prefix = np.concatenate([[0.0], np.cumsum(costs)])
+
+    def cuts_for(bottleneck: float) -> np.ndarray:
+        """Greedy left-to-right packing at a given bottleneck; may use
+        fewer than n_parts groups (never more than n)."""
+        cut = [0]
+        while cut[-1] < n:
+            # furthest end with group sum <= bottleneck, at least one tile
+            end = int(np.searchsorted(prefix, prefix[cut[-1]] + bottleneck,
+                                      side="right")) - 1
+            cut.append(max(end, cut[-1] + 1))
+        return np.asarray(cut, dtype=np.int64)
+
+    lo = float(costs.max())
+    hi = float(prefix[-1])
+    for _ in range(48):
+        mid = 0.5 * (lo + hi)
+        if cuts_for(mid).shape[0] - 1 <= n_parts:
+            hi = mid
+        else:
+            lo = mid
+    cut = cuts_for(hi)
+    k = cut.shape[0] - 1              # groups actually used (<= n_parts)
+    bounds[: k + 1] = cut
+    bounds[k + 1:] = n                # trailing empty shards
+    return bounds
+
+
 def fused_compute_ratio(a: CSR, ct_size: int = 2048) -> float:
     """Figure 1's metric: fraction of second-op *computation* (nonzeros) whose
     dependencies are contained in coarse tiles of size ct_size.

@@ -5,7 +5,6 @@ model input of a (arch × shape) cell — the dry-run contract.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

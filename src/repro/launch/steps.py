@@ -1,7 +1,6 @@
 """Step functions: train_step / prefill_step / serve_step factories."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

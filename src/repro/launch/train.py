@@ -19,7 +19,6 @@ Fault-tolerance features (DESIGN.md §5):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 import time
 
@@ -32,7 +31,6 @@ from ..data import DataConfig, SyntheticStream
 from ..models import transformer as T
 from ..optim import OptConfig, adamw
 from . import steps
-from .mesh import make_host_mesh
 
 
 def main(argv=None):

@@ -5,7 +5,6 @@ Functional style: params are nested dicts of arrays; every layer is
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

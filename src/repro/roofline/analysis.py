@@ -12,7 +12,6 @@ all-reduce / reduce-scatter / all-to-all / collective-permute.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 
 from ..launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16

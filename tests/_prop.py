@@ -10,6 +10,8 @@ is implemented (integers, floats, sampled_from, booleans), keyword-argument
 """
 from __future__ import annotations
 
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

@@ -14,7 +14,7 @@ import pytest
 
 from repro.configs import ARCH_NAMES, SHAPES, cells, get_config
 from repro.launch import partitioning
-from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.mesh import batch_axes
 
 
 def test_cells_cover_assignments():

@@ -1,11 +1,10 @@
 """Fused executors vs oracle — the paper's correctness contract."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _prop import given, settings, st
 
 from repro.core.sparse.formats import CSR
-from repro.core.sparse.random import banded_spd, powerlaw_graph
+from repro.core.sparse.random import powerlaw_graph
 from repro.core.tilefusion import (build_schedule, fused_ops, fused_ref,
                                    to_device_schedule)
 

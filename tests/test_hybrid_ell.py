@@ -12,7 +12,7 @@ from _prop import given, settings, st
 from repro.core.sparse.formats import (CSR, HybridELL, TileELL,
                                        hybrid_width_cap)
 from repro.core.sparse.random import hub_powerlaw
-from repro.core.tilefusion import api, build_schedule, reference, \
+from repro.core.tilefusion import build_schedule, reference, \
     to_device_schedule
 from repro.core.tilefusion.cost_model import hybrid_packed_elements
 

@@ -2,19 +2,27 @@
 
 One parametrized harness pins the whole dispatch matrix: both op pairs
 ({GeMM-SpMM, SpMM-SpMM}) × every backend ({pallas (interpret on CPU), xla,
-unfused, reference}) × the pattern zoo ({banded, blockdiag, powerlaw,
-empty-rows, single-hub-row, 1×1}), all asserted allclose against the
-``fused_ref`` numpy oracle.  The hybrid width cap is left at its "auto"
+unfused, sharded, reference}) × the pattern zoo ({banded, blockdiag,
+powerlaw, empty-rows, single-hub-row, 1×1}), all asserted allclose against
+the ``fused_ref`` numpy oracle.  The hybrid width cap is left at its "auto"
 default so every cell — including the single-hub-row power-law case —
 exercises the capped body + spill-lane path.
+
+The ``sharded`` cell runs ``tile_fused_matmul(..., mesh=...)`` over every
+device this platform has: on a plain 1-device run that exercises the
+trivial-mesh fallback, and on the CI multi-device leg
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``) the real 8-way
+shard_map partition of every cell.
 
 Runs under ``tests/_prop.py``: real hypothesis when installed, a seeded
 deterministic parametrize sweep otherwise.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _prop import given, settings, st
+from jax.sharding import Mesh
 
 from repro.core.sparse.formats import CSR
 from repro.core.sparse.random import (banded_spd, block_diag_noise,
@@ -22,8 +30,14 @@ from repro.core.sparse.random import (banded_spd, block_diag_noise,
 from repro.core.tilefusion import api, fused_ref
 
 #: Explicit override backends plus the numpy schedule-walking oracle.
-BACKENDS = ("pallas", "xla", "unfused", "reference")
+BACKENDS = ("pallas", "xla", "unfused", "sharded", "reference")
 KNOBS = dict(p=2, cache_size=30_000.0, ct_size=32)
+
+
+def _host_mesh() -> Mesh:
+    """All of this platform's devices on one 1-D axis (8 on the CI
+    multi-device leg, 1 on a plain run — the trivial-mesh fallback)."""
+    return Mesh(np.array(jax.devices()), ("shards",))
 
 
 def _empty_rows(n: int, seed: int) -> CSR:
@@ -64,14 +78,17 @@ def _run_cell(a: CSR, op_pair: str, backend: str, c_col: int,
             got = fused_ref.run_gemm_spmm(a, b, c_ge, entry.sched, check=True)
             want = fused_ref.unfused_gemm_spmm(a, b, c_ge)
         return np.asarray(got), want
+    kwargs = dict(KNOBS)
+    if backend == "sharded":
+        kwargs["mesh"] = _host_mesh()
     if op_pair == "spmm":
         got = api.tile_fused_matmul(a, a, jnp.asarray(c_sp, jnp.float32),
-                                    backend=backend, **KNOBS)
+                                    backend=backend, **kwargs)
         want = fused_ref.unfused_spmm_spmm(a, a, c_sp)
     else:
         got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
                                     jnp.asarray(c_ge, jnp.float32),
-                                    backend=backend, **KNOBS)
+                                    backend=backend, **kwargs)
         want = fused_ref.unfused_gemm_spmm(a, b, c_ge)
     return np.asarray(got), want
 

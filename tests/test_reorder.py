@@ -2,7 +2,6 @@
 import numpy as np
 from _prop import given, settings, st
 
-from repro.core.sparse.formats import CSR
 from repro.core.sparse.random import banded_spd, powerlaw_graph
 from repro.core.tilefusion import build_schedule, fused_ref
 from repro.core.tilefusion.reorder import bandwidth, permute_csr, rcm_order

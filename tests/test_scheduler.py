@@ -2,7 +2,6 @@
 import dataclasses
 
 import numpy as np
-import pytest
 from _prop import given, settings, st
 
 from repro.core.sparse.formats import CSR, TileELL

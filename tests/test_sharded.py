@@ -1,0 +1,303 @@
+"""Sharded tile-fusion dispatch: partition, halo, cache keying, shim.
+
+Host-side structure tests (the partitioner and ``ShardedSchedule`` builder
+are pure numpy) run everywhere; execution parity over a *real* multi-device
+mesh runs in-process when the platform has >1 device (the CI leg forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and is additionally
+pinned by a subprocess test that forces an 8-device host platform
+regardless of how the suite itself was launched.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.sparse.random import banded_spd, hub_powerlaw, powerlaw_graph
+from repro.core.tilefusion import api, fused_ref, sharded
+from repro.core.tilefusion.cost_model import shard_comm_model
+from repro.core.tilefusion.scheduler import balanced_contiguous_partition
+from repro.models.sharding import shard_map
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KNOBS = dict(p=2, cache_size=30_000.0, ct_size=32)
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    api.clear_schedule_cache()
+    yield
+    api.clear_schedule_cache()
+
+
+def _mesh(n: int | None = None) -> Mesh:
+    devs = jax.devices()
+    n = len(devs) if n is None else min(n, len(devs))
+    return Mesh(np.array(devs[:n]), ("shards",))
+
+
+# --------------------------------------------------------------------------
+# Partitioner (host-side, device-count independent)
+# --------------------------------------------------------------------------
+def test_balanced_partition_contiguous_and_balanced():
+    costs = np.array([5.0, 1.0, 1.0, 1.0, 5.0, 1.0, 1.0, 1.0])
+    bounds = balanced_contiguous_partition(costs, 4)
+    assert bounds[0] == 0 and bounds[-1] == costs.size
+    assert (np.diff(bounds) >= 0).all()
+    sums = np.add.reduceat(costs, bounds[:-1][np.diff(bounds) > 0])
+    # bottleneck can never beat the largest single tile, and the balanced
+    # split must do no worse than one hot shard carrying everything
+    assert sums.max() >= costs.max()
+    assert sums.max() < costs.sum()
+
+
+def test_balanced_partition_more_shards_than_tiles():
+    bounds = balanced_contiguous_partition(np.array([3.0, 2.0]), 8)
+    assert bounds[0] == 0 and bounds[-1] == 2
+    assert (np.diff(bounds) >= 0).all()
+    assert np.diff(bounds).sum() == 2       # every tile assigned once
+
+
+def test_balanced_partition_empty():
+    bounds = balanced_contiguous_partition(np.zeros(0), 4)
+    assert bounds.shape == (5,) and (bounds == 0).all()
+
+
+def test_shard_comm_model_prices_halo_vs_replication():
+    m = shard_comm_model(8, halo_rows=16, n_i=256, c_col=8, n_j=512)
+    assert m["halo_bytes"] < m["replicate_bytes"]
+    assert m["halo_fraction"] == 16 / 256
+    # the psum output combine moves full-D partials — the dominant term
+    # for small halos, and priced on n_j (D rows), not n_i
+    assert m["combine_bytes"] == 512 * 8 * 4 * (7 / 8) * 8
+    assert m["combine_bytes"] > m["halo_bytes"]
+    # single shard: no remote bytes at all
+    m1 = shard_comm_model(1, halo_rows=16, n_i=256, c_col=8)
+    assert m1["halo_bytes"] == 0.0 and m1["replicate_bytes"] == 0.0
+    assert m1["combine_bytes"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# ShardedSchedule structure (host-side)
+# --------------------------------------------------------------------------
+def test_sharded_schedule_structure():
+    a = powerlaw_graph(256, 5, seed=3)
+    entry = api.get_schedule(a, b_col=8, c_col=8, **KNOBS)
+    shard = sharded.build_sharded_schedule(
+        a, entry.sched, entry.dsched, 4, b_col=8, c_col=8,
+        b_is_sparse=False, width_cap=entry.width_cap)
+    assert shard is not None and shard.n_shards == 4
+    ds = entry.dsched
+    # every wf0 tile assigned to exactly one shard, in order
+    assert shard.tile_bounds[0] == 0
+    assert shard.tile_bounds[-1] == ds.n_tiles0
+    counts = shard.shard_tile_counts()
+    assert counts.sum() == ds.n_tiles0
+    # halo = exactly the wf1 dependency set, owned by row-block ranges
+    halo = shard.halo_rows
+    np.testing.assert_array_equal(halo, ds.wf1_dep_rows())
+    row_bounds = shard.tile_bounds * shard.t_pad
+    pos_seen = np.sort(shard.send_pos[shard.send_pos < shard.halo_size])
+    np.testing.assert_array_equal(pos_seen, np.arange(shard.halo_size))
+    for s in range(4):
+        sl = shard.send_local.reshape(4, -1)[s]
+        sp = shard.send_pos[s]
+        real = sp < shard.halo_size
+        # each contributed halo row is inside the shard's own row block
+        glob = sl[real] + row_bounds[s]
+        assert ((glob >= row_bounds[s]) & (glob < row_bounds[s + 1])).all()
+        np.testing.assert_array_equal(glob, halo[sp[real]])
+
+
+def test_sharded_schedule_requires_uniform_grid():
+    a = powerlaw_graph(128, 4, seed=1)
+    entry = api.get_schedule(a, b_col=8, c_col=8, uniform_split=False,
+                             p=2, cache_size=2_000.0, ct_size=32)
+    if not api.fused_ops._is_uniform(entry.dsched):
+        assert sharded.build_sharded_schedule(
+            a, entry.sched, entry.dsched, 4, b_col=8, c_col=8,
+            b_is_sparse=False, width_cap=entry.width_cap) is None
+
+
+# --------------------------------------------------------------------------
+# Cache keying: mesh shape is part of the schedule key
+# --------------------------------------------------------------------------
+def test_mesh_shape_misses_schedule_cache():
+    a = banded_spd(128, 4, seed=0)
+    e_plain = api.get_schedule(a, b_col=8, c_col=8, **KNOBS)
+    assert api.schedule_cache_stats()["misses"] == 1
+    assert api.schedule_cache_stats()["mesh_entries"] == 0
+
+    mesh1 = _mesh(1)
+    # a trivial mesh keys exactly like no mesh: pure hit, not a new entry
+    assert api.get_schedule(a, b_col=8, c_col=8, mesh=mesh1,
+                            **KNOBS) is e_plain
+    assert api.schedule_cache_stats()["misses"] == 1
+
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device for non-trivial mesh keys "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    mesh_n = _mesh()
+    e_mesh = api.get_schedule(a, b_col=8, c_col=8, mesh=mesh_n, **KNOBS)
+    assert e_mesh is not e_plain            # same content, new mesh: miss
+    assert e_mesh.shard is not None
+    stats = api.schedule_cache_stats()
+    assert stats["misses"] == 2 and stats["mesh_entries"] == 1
+    # same mesh shape under a different Mesh object: hit
+    assert api.get_schedule(a, b_col=8, c_col=8, mesh=_mesh(),
+                            **KNOBS) is e_mesh
+    # a different mesh *shape* over the same devices: miss again
+    devs = jax.devices()
+    mesh_2d = Mesh(np.array(devs).reshape(2, -1), ("x", "y"))
+    e_2d = api.get_schedule(a, b_col=8, c_col=8, mesh=mesh_2d, **KNOBS)
+    assert e_2d is not e_mesh
+    stats = api.schedule_cache_stats()
+    assert stats["misses"] == 3 and stats["mesh_entries"] == 2
+
+
+def test_trivial_mesh_falls_back_single_device():
+    a = banded_spd(64, 4, seed=2)
+    rng = np.random.default_rng(2)
+    b = rng.standard_normal((64, 8))
+    c = rng.standard_normal((8, 8))
+    got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                                jnp.asarray(c, jnp.float32),
+                                backend="sharded", mesh=_mesh(1), **KNOBS)
+    np.testing.assert_allclose(np.asarray(got),
+                               fused_ref.unfused_gemm_spmm(a, b, c),
+                               rtol=2e-3, atol=2e-3)
+    entry = api.get_schedule(a, b_col=8, c_col=8, mesh=_mesh(1), **KNOBS)
+    assert entry.shard is None and entry.mesh_key is None
+
+
+# --------------------------------------------------------------------------
+# Multi-device execution (in-process; real on the forced-8-device CI leg)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("op_pair", ["gemm", "spmm"])
+def test_sharded_parity_multi_device(op_pair):
+    if len(jax.devices()) < 2:
+        pytest.skip("single-device platform; the CI multi-device leg sets "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    mesh = _mesh()
+    a = hub_powerlaw(96, 4, seed=0)         # hub row: spill lanes cross too
+    rng = np.random.default_rng(0)
+    if op_pair == "spmm":
+        c = rng.standard_normal((96, 8))
+        got = api.tile_fused_matmul(a, a, jnp.asarray(c, jnp.float32),
+                                    backend="sharded", mesh=mesh, **KNOBS)
+        want = fused_ref.unfused_spmm_spmm(a, a, c)
+    else:
+        b = rng.standard_normal((96, 8))
+        c = rng.standard_normal((8, 8))
+        got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                                    jnp.asarray(c, jnp.float32),
+                                    backend="sharded", mesh=mesh, **KNOBS)
+        want = fused_ref.unfused_gemm_spmm(a, b, c)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+    entry = api.get_schedule(a, b_col=8, c_col=8,
+                             b_is_sparse=(op_pair == "spmm"), mesh=mesh,
+                             **KNOBS)
+    assert entry.shard is not None
+    assert api.select_backend(entry) == "sharded"
+    assert entry.traffic_model["sharded"]["halo_rows"] \
+        == entry.shard.halo_size
+
+
+def test_auto_with_mesh_dispatches_sharded_even_unfusable():
+    """``backend="auto"`` with a non-trivial mesh must honor the mesh even
+    when the Eq-3 model would pick the unfused fallback on one device — a
+    fusion-free schedule still distributes op-1 and wavefront-1 work."""
+    if len(jax.devices()) < 2:
+        pytest.skip("single-device platform")
+    from repro.core.sparse.formats import CSR
+    rng = np.random.default_rng(4)
+    a = CSR.from_dense(rng.standard_normal((64, 64)))   # dense: fuses nothing
+    entry = api.get_schedule(a, b_col=8, c_col=8, mesh=_mesh(), **KNOBS)
+    assert entry.sched.fused_ratio < api.MIN_FUSED_RATIO
+    assert entry.shard is not None
+    assert api.select_backend(entry) == "sharded"
+    b = rng.standard_normal((64, 8))
+    c = rng.standard_normal((8, 8))
+    got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                                jnp.asarray(c, jnp.float32),
+                                backend="auto", mesh=_mesh(), **KNOBS)
+    np.testing.assert_allclose(np.asarray(got),
+                               fused_ref.unfused_gemm_spmm(a, b, c),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_shard_map_shim_threads_check_kwarg():
+    """The shim must accept ``check_vma`` against whichever spelling the
+    installed JAX uses, on a real mesh, in both True/False modes."""
+    mesh = _mesh(1)
+
+    def f(x):
+        return jax.lax.psum(x.sum(keepdims=True), "shards")
+
+    x = jnp.arange(4, dtype=jnp.float32)
+    for check in (True, False):
+        g = shard_map(f, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                      check_vma=check)
+        assert float(jax.jit(g)(x)[0]) == 6.0
+
+
+# --------------------------------------------------------------------------
+# Forced 8-device host platform (subprocess: env must be set before jax
+# initializes, so this covers multi-device even on a 1-device tier-1 run)
+# --------------------------------------------------------------------------
+_FORCED_SCRIPT = r"""
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+assert len(jax.devices()) == 8, jax.devices()
+mesh = Mesh(np.array(jax.devices()), ("shards",))
+
+# 1) the shard_map shim on a real 8-way mesh, both check modes
+from repro.models.sharding import shard_map
+def f(x):
+    return jax.lax.psum(x.sum(keepdims=True), "shards")
+for check in (True, False):
+    g = shard_map(f, mesh=mesh, in_specs=(P("shards"),), out_specs=P(),
+                  check_vma=check)
+    out = jax.jit(g)(jnp.arange(16, dtype=jnp.float32))
+    assert float(out[0]) == 120.0, out
+
+# 2) sharded tile-fusion parity on the 8-way mesh, both op pairs
+from repro.core.sparse.random import hub_powerlaw
+from repro.core.tilefusion import api, fused_ref
+a = hub_powerlaw(96, 4, seed=0)
+rng = np.random.default_rng(0)
+knobs = dict(p=2, cache_size=30_000.0, ct_size=32)
+b = rng.standard_normal((96, 8)); cg = rng.standard_normal((8, 8))
+got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                            jnp.asarray(cg, jnp.float32),
+                            backend="sharded", mesh=mesh, **knobs)
+np.testing.assert_allclose(np.asarray(got),
+                           fused_ref.unfused_gemm_spmm(a, b, cg),
+                           rtol=2e-3, atol=2e-3)
+cs = rng.standard_normal((96, 8))
+got = api.tile_fused_matmul(a, a, jnp.asarray(cs, jnp.float32),
+                            backend="sharded", mesh=mesh, **knobs)
+np.testing.assert_allclose(np.asarray(got),
+                           fused_ref.unfused_spmm_spmm(a, a, cs),
+                           rtol=2e-3, atol=2e-3)
+entry = api.get_schedule(a, b_col=8, c_col=8, mesh=mesh, **knobs)
+assert entry.shard.n_shards == 8
+print("FORCED8 OK")
+"""
+
+
+def test_forced_8_device_host_mesh():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(REPO_ROOT, "src"),
+                    os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", _FORCED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "FORCED8 OK" in out.stdout

@@ -1,7 +1,6 @@
 """Chunked linear recurrence vs step-by-step reference (property tests)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _prop import given, settings, st
 
 from repro.models.ssm import (chunked_linear_recurrence,

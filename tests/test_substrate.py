@@ -192,7 +192,6 @@ def test_opt_shardings_zero1():
 
 def test_moe_shard_map_trivial_mesh_matches_local():
     """shard_map MoE on a 1x1 mesh == the local path (numerics identical)."""
-    import dataclasses
     from repro.configs import get_config
     from repro.models.layers import moe_apply, moe_init
     from repro.models.sharding import ShardingRules

@@ -1,8 +1,4 @@
 """End-to-end behaviour: the paper's claims as executable assertions."""
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core.sparse.random import banded_spd, powerlaw_graph
 from repro.core.tilefusion import build_schedule, to_device_schedule
 
