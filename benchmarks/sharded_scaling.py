@@ -5,8 +5,14 @@ On this CPU container the "mesh" is whatever the host platform exposes
 the CI multi-device leg does); a 1-device platform exercises the
 trivial-mesh fallback, so the driver never bit-rots regardless of the
 environment.  Timings on forced host devices are NOT accelerator
-performance — the derived columns that matter are the partition balance and
-the halo-vs-replication byte ratio from ``cost_model.shard_comm_model``.
+performance — the derived columns that matter are the partition balance
+and the modeled byte counts from ``cost_model.shard_comm_model``: the
+halo-vs-replication ratio and the output-combine prices
+(``comb_psum`` vs ``comb_rs`` — the reduce-scatter row remap must be
+strictly cheaper whenever more than one shard owns output rows).  On a
+≥4-device platform a second sharded row runs the same problem on a 2-D
+mesh under ``shard_layout="auto"`` so the 1.5D column-replica path is
+exercised and priced too.
 """
 from __future__ import annotations
 
@@ -25,14 +31,43 @@ def _mesh() -> Mesh:
     return Mesh(np.array(jax.devices()), ("shards",))
 
 
+def _mesh_2d() -> Mesh | None:
+    n = len(jax.devices())
+    if n < 4:
+        return None
+    # drop a trailing device on odd counts so the (n//2, 2) grid reshapes
+    devs = jax.devices()[: (n // 2) * 2]
+    return Mesh(np.array(devs).reshape(n // 2, 2), ("x", "y"))
+
+
+def _shard_derived(entry) -> str:
+    """Derived columns for a sharded run: partition balance + the comm
+    model's priced bytes (halo, psum combine, reduce-scatter combine)."""
+    if entry.shard is None:
+        return ";trivial_mesh_fallback"
+    cm = entry.shard.comm_model
+    counts = entry.shard.shard_tile_counts()
+    return (f";layout={entry.shard.layout}"
+            f";combine={entry.shard.combine}"
+            f";halo_rows={cm['halo_rows']}"
+            f";halo_frac={cm['halo_fraction']:.3f}"
+            f";comb_psum={cm['combine_bytes']:.0f}"
+            f";comb_rs={cm['combine_bytes_reduce_scatter']:.0f}"
+            f";tiles_per_shard="
+            f"{int(counts.min())}-{int(counts.max())}")
+
+
 def run():
     rows = []
     rng = np.random.default_rng(11)
-    mesh = _mesh()
     n_dev = len(jax.devices())
     bcol = 32
     n = bench_n(4096)
     knobs = dict(p=8, cache_size=100_000.0, ct_size=256)
+    mesh_cells = [("sharded", _mesh(), {})]
+    mesh2d = _mesh_2d()
+    if mesh2d is not None:
+        mesh_cells.append(("sharded2d", mesh2d, {"shard_layout": "auto"}))
     mats = {"banded_spd_b8": banded_spd(n, 8, seed=11),
             "powerlaw_d4": powerlaw_graph(n, 4, seed=11)}
     for name, a in mats.items():
@@ -40,25 +75,21 @@ def run():
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
         want = fused_ref.unfused_gemm_spmm(a, np.asarray(b, np.float64),
                                            np.asarray(c, np.float64))
-        for backend, kw in (("xla", {}), ("sharded", {"mesh": mesh})):
+        cells = [("xla", None, {})] + mesh_cells
+        for backend, mesh, extra in cells:
+            kw = dict(extra)
+            if mesh is not None:
+                kw["mesh"] = mesh
+            be = "sharded" if mesh is not None else backend
             t_us = time_fn(api.tile_fused_matmul, a, b, c,
-                           backend=backend, **kw, **knobs)
-            got = api.tile_fused_matmul(a, b, c, backend=backend, **kw,
-                                        **knobs)
+                           backend=be, **kw, **knobs)
+            got = api.tile_fused_matmul(a, b, c, backend=be, **kw, **knobs)
             err = float(np.abs(np.asarray(got) - want).max())
             derived = f"devices={n_dev};max_err={err:.2e}"
-            if backend == "sharded":
+            if mesh is not None:
                 entry = api.get_schedule(a, b_col=bcol, c_col=bcol,
-                                         mesh=mesh, **knobs)
-                if entry.shard is not None:
-                    cm = entry.shard.comm_model
-                    counts = entry.shard.shard_tile_counts()
-                    derived += (f";halo_rows={cm['halo_rows']}"
-                                f";halo_frac={cm['halo_fraction']:.3f}"
-                                f";tiles_per_shard="
-                                f"{int(counts.min())}-{int(counts.max())}")
-                else:
-                    derived += ";trivial_mesh_fallback"
+                                         **kw, **knobs)
+                derived += _shard_derived(entry)
             rows.append((f"sharded/gemm_spmm/{name}/{backend}", t_us,
                          derived))
         # SpMM-SpMM on the powerlaw pattern only (op-1 == A, paper setting)
@@ -66,12 +97,21 @@ def run():
             continue
         cs = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
         want2 = fused_ref.unfused_spmm_spmm(a, a, np.asarray(cs, np.float64))
-        for backend, kw in (("xla", {}), ("sharded", {"mesh": mesh})):
+        for backend, mesh, extra in cells:
+            kw = dict(extra)
+            if mesh is not None:
+                kw["mesh"] = mesh
+            be = "sharded" if mesh is not None else backend
             t_us = time_fn(api.tile_fused_matmul, a, a, cs,
-                           backend=backend, **kw, **knobs)
-            got = api.tile_fused_matmul(a, a, cs, backend=backend, **kw,
+                           backend=be, **kw, **knobs)
+            got = api.tile_fused_matmul(a, a, cs, backend=be, **kw,
                                         **knobs)
             err = float(np.abs(np.asarray(got) - want2).max())
+            derived = f"devices={n_dev};max_err={err:.2e}"
+            if mesh is not None:
+                entry = api.get_schedule(a, b_col=bcol, c_col=bcol,
+                                         b_is_sparse=True, **kw, **knobs)
+                derived += _shard_derived(entry)
             rows.append((f"sharded/spmm_spmm/{name}/{backend}", t_us,
-                         f"devices={n_dev};max_err={err:.2e}"))
+                         derived))
     return rows

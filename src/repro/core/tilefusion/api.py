@@ -49,15 +49,23 @@ oldest-first instead of growing without bound.
 counts of both caches.
 
 **Sharded dispatch (``mesh=``).**  Passing a non-trivial
-``jax.sharding.Mesh`` partitions the wavefront-0 fused-tile grid 1-D
-row-block over the mesh's flattened devices, contiguous tile groups
-balanced by their Eq-3 cost; the per-shard executor runs under ``shard_map``
-(wavefront 0 is communication-free by the fusion criterion), the
-wavefront-1 halo rows are all-gathered, and the disjoint partial outputs
-psum-combined.  The mesh's (axis names, shape) joins the schedule-cache
-key, ``schedule_cache_stats()`` reports the mesh-keyed entries as
-``mesh_entries``, and a trivial mesh falls back to single-device dispatch.
-CPU CI exercises the real multi-device path via
+``jax.sharding.Mesh`` partitions the wavefront-0 fused-tile grid row-block
+over the mesh's row shards, contiguous tile groups balanced by their Eq-3
+cost; the per-shard executor runs under ``shard_map`` (wavefront 0 is
+communication-free by the fusion criterion) and the wavefront-1 halo rows
+are all-gathered over the row axis.  The output combine is chosen by
+priced bytes (``shard_combine="auto"``): the row-remapped reduce-scatter
+emits per-shard owner blocks (zero combine collectives — partials are
+owner-disjoint by construction) with psum retained as the simple
+fallback.  2-D meshes can split the dense operand's columns over the
+trailing axis (``shard_layout="1.5d"``, the replicated 1.5D layout —
+``cost_model.choose_mesh_layout`` weighs its communication saving against
+the operand copies) or flatten every axis into row shards (``"1d"``).
+The mesh's (axis names, shape) plus both knobs join the schedule-cache
+key; ``schedule_cache_stats()`` reports the mesh-keyed entries as
+``mesh_entries`` with per-layout counters (``layout_1d`` /
+``layout_15d`` / ``layout_fallback``), and a trivial mesh falls back to
+single-device dispatch.  CPU CI exercises the real multi-device path via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  See ``sharded.py``.
 
 Everything outside ``core/tilefusion`` (models, examples, benchmarks) routes
@@ -84,14 +92,49 @@ from .schedule import DeviceSchedule, to_device_schedule
 from .scheduler import Schedule, build_schedule
 
 
-def _mesh_size(mk: tuple | None) -> int:
-    """Device count encoded in a ``sharded.mesh_key`` (1 for None)."""
+def _shard_for_mesh(a: CSR, sched, dsched, mk: tuple, *, b_col: int,
+                    c_col: int, b_is_sparse: bool, width_cap,
+                    shard_combine: str, shard_layout: str):
+    """Mesh-shape-aware shard build: resolve how the mesh's axes are used
+    (pure-1D row shards vs 1.5D row × column-replica) and which output
+    combine runs, then build the per-shard schedule.
+
+    ``shard_layout="auto"`` consults ``cost_model.choose_mesh_layout`` with
+    the schedule's own halo size against the operand bytes replication
+    would copy; ``shard_combine="auto"`` defers to ``shard_comm_model``'s
+    psum-vs-reduce-scatter pricing inside the builder."""
+    shape = mk[1]
+    layout = shard_layout
+    if layout == "auto":
+        operand_bytes = float(a.nnz * 2 + dsched.n_i * b_col) * 4
+        layout = cost_model.choose_mesh_layout(
+            shape, halo_rows=int(dsched.wf1_dep_rows().shape[0]),
+            n_i=dsched.n_i, n_j=dsched.n_j, c_col=c_col,
+            operand_bytes=operand_bytes)["layout"]
+    return sharded.build_sharded_schedule(
+        a, sched, dsched, shape, b_col=b_col, c_col=c_col,
+        b_is_sparse=b_is_sparse, width_cap=width_cap, layout=layout,
+        combine=shard_combine)
+
+
+def _shard_knobs_key(mk: tuple | None, shard_combine: str,
+                     shard_layout: str) -> tuple:
+    """Validated cache-key component for the sharding knobs: a typo'd knob
+    must fail loudly (never silently fall back to another layout), and on
+    a trivial mesh the pair collapses to (None, None) so ``mesh=None`` and
+    a 1-device mesh keep sharing entries regardless of the (then inert)
+    knob values."""
+    from .scheduler import MESH_LAYOUTS
+    if shard_combine not in sharded.COMBINE_MODES + ("auto",):
+        raise ValueError(
+            f"shard_combine={shard_combine!r}; expected one of "
+            f"{sharded.COMBINE_MODES + ('auto',)}")
+    if shard_layout not in MESH_LAYOUTS + ("auto",):
+        raise ValueError(f"shard_layout={shard_layout!r}; expected one of "
+                         f"{MESH_LAYOUTS + ('auto',)}")
     if mk is None:
-        return 1
-    size = 1
-    for s in mk[1]:
-        size *= int(s)
-    return size
+        return (None, None)
+    return (str(shard_combine), str(shard_layout))
 
 #: Valid ``backend=`` values for tile_fused_matmul.
 BACKENDS = ("auto", "pallas", "xla", "unfused", "sharded")
@@ -265,7 +308,8 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                  b_is_sparse: bool = False, uniform_split: bool = True,
                  autotune: bool = False,
                  width_cap: int | str | None = "auto",
-                 mesh=None) -> ScheduleEntry:
+                 mesh=None, shard_combine: str = "auto",
+                 shard_layout: str = "auto") -> ScheduleEntry:
     """Run Algorithm 1 once per (content, tile size, cache budget) and
     memoize; subsequent calls with the same key return the cached entry
     without touching the scheduler.
@@ -288,22 +332,27 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     the cache key — changing it can never reuse a stale schedule.
 
     ``mesh`` (a ``jax.sharding.Mesh``) additionally partitions the
-    wavefront-0 tile grid over the mesh's devices (1-D row-block,
-    Eq-3-balanced) and attaches the per-shard arrays + halo index sets as
-    ``entry.shard``.  The mesh's (axis names, shape) joins the cache key:
-    the same matrix on a different mesh shape re-inspects.  A trivial
-    (single-device or None) mesh keys and dispatches exactly like no
-    mesh."""
+    wavefront-0 tile grid over the mesh's devices (row-block,
+    Eq-3-balanced; 2-D meshes can split the dense operand's columns over
+    the trailing axis — the 1.5D layout) and attaches the per-shard arrays
+    + halo index sets as ``entry.shard``.  ``shard_layout``
+    ("auto" | "1d" | "1.5d") picks how a 2-D mesh's axes are used and
+    ``shard_combine`` ("auto" | "psum" | "reduce_scatter") the output
+    combine; both join the cache key alongside the mesh's (axis names,
+    shape): the same matrix on a different mesh shape or layout
+    re-inspects.  A trivial (single-device or None) mesh keys and
+    dispatches exactly like no mesh."""
     cap = _resolve_width_cap(a, width_cap)
     mk = sharded.mesh_key(mesh)
+    sk = _shard_knobs_key(mk, shard_combine, shard_layout)
     if autotune:
         return _autotune_schedule(a, b_col=b_col, c_col=c_col, p=p,
                                   cache_size=cache_size, ct_size=ct_size,
                                   b_is_sparse=b_is_sparse,
                                   uniform_split=uniform_split,
-                                  width_cap=cap, mesh_k=mk)
+                                  width_cap=cap, mesh_k=mk, shard_knobs=sk)
     key = (_content_key(a), b_col, c_col, p, float(cache_size), ct_size,
-           b_is_sparse, uniform_split, cap, mk)
+           b_is_sparse, uniform_split, cap, mk, sk)
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None:
@@ -320,9 +369,10 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     tm["packed_ell_bytes"] = _packed_ell_bytes(a, dsched, b_is_sparse)
     shard = None
     if mk is not None:
-        shard = sharded.build_sharded_schedule(
-            a, sched, dsched, _mesh_size(mk), b_col=b_col, c_col=c_col,
-            b_is_sparse=b_is_sparse, width_cap=cap)
+        shard = _shard_for_mesh(a, sched, dsched, mk, b_col=b_col,
+                                c_col=c_col, b_is_sparse=b_is_sparse,
+                                width_cap=cap, shard_combine=sk[0],
+                                shard_layout=sk[1])
         if shard is not None:
             tm["sharded"] = shard.comm_model
     entry = ScheduleEntry(sched=sched, dsched=dsched, b_col=b_col,
@@ -339,7 +389,8 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
 def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
                        cache_size: float, ct_size: int, b_is_sparse: bool,
                        uniform_split: bool, width_cap: int | None,
-                       mesh_k: tuple | None = None) -> ScheduleEntry:
+                       mesh_k: tuple | None = None,
+                       shard_knobs: tuple = (None, None)) -> ScheduleEntry:
     """Eq-3 tile-size × width-cap sweep, memoized under its own entry.
 
     Candidates: (AUTOTUNE_CT_GRID ∪ {ct_size, 2048}) × AUTOTUNE_CACHE_SCALES
@@ -352,7 +403,8 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
     heuristic, never regress it.
     """
     key = ("autotune", _content_key(a), b_col, c_col, p, float(cache_size),
-           ct_size, b_is_sparse, uniform_split, width_cap, mesh_k)
+           ct_size, b_is_sparse, uniform_split, width_cap, mesh_k,
+           shard_knobs)
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None:
@@ -404,9 +456,12 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
     if mesh_k is not None:
         # the sweep's candidates are mesh-free; shard the winner (a fresh
         # traffic_model dict so the single-device candidate stays untouched)
-        shard = sharded.build_sharded_schedule(
-            a, best.sched, best.dsched, _mesh_size(mesh_k), b_col=b_col,
-            c_col=c_col, b_is_sparse=b_is_sparse, width_cap=best.width_cap)
+        shard = _shard_for_mesh(a, best.sched, best.dsched, mesh_k,
+                                b_col=b_col, c_col=c_col,
+                                b_is_sparse=b_is_sparse,
+                                width_cap=best.width_cap,
+                                shard_combine=shard_knobs[0],
+                                shard_layout=shard_knobs[1])
         tm = dict(best.traffic_model)
         if shard is not None:
             tm["sharded"] = shard.comm_model
@@ -454,13 +509,28 @@ def clear_schedule_cache() -> None:
 def schedule_cache_stats() -> dict:
     """Counters plus live entry counts of both process-wide caches.
     ``mesh_entries`` counts the live schedule entries inspected for a
-    non-trivial mesh (the sharded-dispatch tier's cache footprint)."""
+    non-trivial mesh (the sharded-dispatch tier's cache footprint), broken
+    down by the layout the dispatch resolved: ``layout_1d`` (pure row
+    shards), ``layout_15d`` (column-replicated 1.5D), ``layout_fallback``
+    (mesh-keyed entries whose grid couldn't shard — non-uniform schedules
+    dispatching single-device)."""
     with _lock, _ell_lock:
-        mesh_entries = sum(1 for e in _schedule_cache.values()
-                           if e.mesh_key is not None)
+        mesh_entries = layout_1d = layout_15d = layout_fallback = 0
+        for e in _schedule_cache.values():
+            if e.mesh_key is None:
+                continue
+            mesh_entries += 1
+            if e.shard is None:
+                layout_fallback += 1
+            elif e.shard.n_repl > 1:
+                layout_15d += 1
+            else:
+                layout_1d += 1
         return dict(_stats, entries=len(_schedule_cache),
                     ell_entries=len(_ell_cache),
-                    mesh_entries=mesh_entries)
+                    mesh_entries=mesh_entries,
+                    layout_1d=layout_1d, layout_15d=layout_15d,
+                    layout_fallback=layout_fallback)
 
 
 # --------------------------------------------------------------------------
@@ -608,7 +678,8 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
                       ct_size: int = 2048, uniform_split: bool = True,
                       autotune: bool = False,
                       width_cap: int | str | None = "auto",
-                      mesh=None) -> jax.Array:
+                      mesh=None, shard_combine: str = "auto",
+                      shard_layout: str = "auto") -> jax.Array:
     """``D = a @ (b_or_a1 @ c)`` through the tile-fusion schedule.
 
     Args:
@@ -628,13 +699,26 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
         the degree distribution), an explicit int, or None for pad-to-max.
         Part of the schedule/ELL cache keys.
       mesh: a ``jax.sharding.Mesh`` to distribute over — the wavefront-0
-        tile grid is partitioned 1-D row-block across the mesh's flattened
-        devices (Eq-3-balanced), wavefront 1 reads an all-gathered halo,
-        and ``backend="auto"`` dispatches to the sharded executors.  On a
+        tile grid is partitioned row-block across the mesh's row shards
+        (Eq-3-balanced), wavefront 1 reads an all-gathered halo, and
+        ``backend="auto"`` dispatches to the sharded executors.  On a
         CPU host, force a multi-device platform with
         ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  A trivial
         mesh (one device, or ``mesh=None``) falls back to single-device
         dispatch — including for ``backend="sharded"``.
+      shard_combine: output-combine strategy over the mesh's row axis —
+        "psum" (full-D all-reduce) or "reduce_scatter" (row-remapped
+        owner blocks: each shard emits only the D rows it owns; the
+        inverse permutation is applied on the way out).  "auto" (default)
+        lets ``cost_model.shard_comm_model`` pick by priced bytes.
+      shard_layout: how a 2-D mesh's axes are used — "1d" flattens every
+        axis into row shards; "1.5d" keeps the leading axis for row
+        blocks and splits the dense operand's columns over the trailing
+        axis (replicating A/B per column group — the
+        communication-vs-memory tradeoff of 1.5D algorithms).  "auto"
+        (default) lets ``cost_model.choose_mesh_layout`` weigh halo bytes
+        against replication memory.  Both knobs join the schedule cache
+        key; on a trivial mesh they are inert.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend={backend!r}; expected one of {BACKENDS}")
@@ -661,7 +745,9 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
     entry = get_schedule(a, b_col=b_col, c_col=c.shape[1], p=p,
                          cache_size=cache_size, ct_size=ct_size,
                          b_is_sparse=b_is_sparse, uniform_split=uniform_split,
-                         autotune=autotune, width_cap=width_cap, mesh=mesh)
+                         autotune=autotune, width_cap=width_cap, mesh=mesh,
+                         shard_combine=shard_combine,
+                         shard_layout=shard_layout)
     chosen = select_backend(entry) if backend == "auto" else backend
 
     if chosen == "sharded" and entry.shard is None:

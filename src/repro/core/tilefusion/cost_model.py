@@ -185,48 +185,113 @@ def tile_costs_batch(
 
 
 def shard_comm_model(n_shards: int, halo_rows: int, n_i: int, c_col: int,
-                     dtype_bytes: int = 4, n_j: int | None = None) -> dict:
-    """Communication terms of the sharded dispatch (1-D row-block partition
-    of the wavefront-0 tile grid over ``n_shards`` devices).
+                     dtype_bytes: int = 4, n_j: int | None = None,
+                     n_repl: int = 1,
+                     combine_rows: int | None = None) -> dict:
+    """Communication terms of the sharded dispatch: ``n_shards`` row-block
+    shards of the wavefront-0 tile grid × ``n_repl`` column replicas of the
+    dense operand (the 1.5D layout; ``n_repl=1`` is the pure-1D partition).
 
     Wavefront 0 is communication-free (the fusion criterion makes every
-    fused row's dependencies tile-local, hence shard-local).  Two
-    cross-shard transfers remain, both priced here:
+    fused row's dependencies tile-local, hence shard-local).  Each column
+    replica carries ``c_col / n_repl`` columns of C/D1/D, so every term
+    below shrinks with replication — the price is memory, not bytes on the
+    wire: the sparse operand and B are stored ``n_repl`` times
+    (``choose_mesh_layout`` weighs the two).  Terms:
 
       ``halo_bytes``       all-gather of just the wavefront-1 halo — the
                            ``halo_rows`` D1 rows the post-barrier wavefront
                            reads: every device receives the (S-1)/S
                            fraction it doesn't own.
-      ``combine_bytes``    the output combine: each shard's rows of D are
-                           disjoint but scattered (fused rows follow the
-                           pattern, not contiguous blocks), so the
-                           executors all-reduce the full ``(n_j, c_col)``
-                           partial — the dominant term for small halos.  A
-                           row-remapped reduce-scatter would cut this to
-                           D's own bytes; open item in the ROADMAP.
-      ``replicate_bytes``  the 1.5D-style alternative to the halo exchange
-                           — all-gather the full D1 so wavefront 1 needs
-                           no index sets (or, equivalently, replicate op-1
+      ``combine_bytes``    the *psum* output combine: each shard's rows of
+                           D are disjoint but scattered (fused rows follow
+                           the pattern, not contiguous blocks), so the
+                           psum executors all-reduce the full
+                           ``(n_j, c_col)`` partial — the dominant term
+                           for small halos.
+      ``combine_bytes_reduce_scatter``
+                           the row-remapped reduce-scatter combine: D rows
+                           are permuted so every shard owns one contiguous
+                           block (``combine_rows`` = padded permuted row
+                           count, ≈ n_j); partials are owner-disjoint, so
+                           each block crosses the wire exactly once when
+                           the output is consumed instead of every row
+                           reaching every device.
+      ``replicate_bytes``  the alternative to the halo exchange —
+                           all-gather the full D1 so wavefront 1 needs no
+                           index sets (or, equivalently, replicate op-1
                            compute).
 
-    ``halo_fraction`` (halo / full D1) is the exchange-strategy decision
-    variable: a near-1 fraction says the pattern scatters its wavefront-1
-    deps so widely that replication costs the same bytes and saves the
-    index bookkeeping."""
+    ``combine`` is the model's choice between the two combine strategies
+    (fewest bytes wins; ties keep the simpler psum).  ``halo_fraction``
+    (halo / full D1) is the exchange-strategy decision variable: a near-1
+    fraction says the pattern scatters its wavefront-1 deps so widely that
+    replication costs the same bytes and saves the index bookkeeping."""
     s = max(int(n_shards), 1)
+    r = max(int(n_repl), 1)
     remote = (s - 1) / s
-    halo = float(halo_rows) * c_col * dtype_bytes * remote * s
-    full = float(n_i) * c_col * dtype_bytes * remote * s
-    combine = float(n_i if n_j is None else n_j) * c_col * dtype_bytes \
-        * remote * s
+    cc_r = c_col / r                     # columns per replica group
+    out_rows = float(n_i if n_j is None else n_j)
+    perm_rows = out_rows if combine_rows is None else float(combine_rows)
+    halo = float(halo_rows) * cc_r * dtype_bytes * remote * s * r
+    full = float(n_i) * cc_r * dtype_bytes * remote * s * r
+    combine = out_rows * cc_r * dtype_bytes * remote * s * r
+    combine_rs = perm_rows * cc_r * dtype_bytes * remote * r
     return {
         "n_shards": s,
+        "n_repl": r,
         "halo_rows": int(halo_rows),
         "halo_bytes": halo,
         "combine_bytes": combine,
+        "combine_bytes_reduce_scatter": combine_rs,
+        "combine": "reduce_scatter" if combine_rs < combine else "psum",
         "replicate_bytes": full,
         "halo_fraction": float(halo_rows) / max(n_i, 1),
+        "layout": "1d" if r == 1 else "1.5d",
     }
+
+
+def choose_mesh_layout(mesh_shape, *, halo_rows: int, n_i: int, n_j: int,
+                       c_col: int, operand_bytes: float,
+                       dtype_bytes: int = 4) -> dict:
+    """How the sharded dispatch should use a mesh's axes: pure-1D (flatten
+    every axis into row-block shards) vs replicated-1.5D (leading axis row
+    shards, trailing axes column replicas of the dense operand).
+
+    The 1.5D layout of Bharadwaj et al. trades memory for communication:
+    with ``n_repl`` replicas each device stores the sparse operand and B
+    ``n_repl`` times over (`replication_cost_bytes``) but moves only
+    ``c_col / n_repl`` columns of halo and combine traffic — and the fewer
+    row shards also shrink the remote fraction.  The chooser picks the
+    layout with the smaller total of modeled communication bytes plus the
+    extra operand copies, so big halos (comm-dominated problems) flip it
+    to 1.5D and small halos keep the replication-free 1-D partition.
+
+    Returns ``{"layout", "n_row", "n_repl", "candidates"}`` where
+    ``candidates`` maps each layout to its modeled cost terms."""
+    shape = tuple(int(x) for x in mesh_shape)
+    total = 1
+    for x in shape:
+        total *= x
+
+    def cost(n_row: int, n_repl: int) -> dict:
+        m = shard_comm_model(n_row, halo_rows, n_i, c_col,
+                             dtype_bytes=dtype_bytes, n_j=n_j,
+                             n_repl=n_repl)
+        comm = m["halo_bytes"] + min(m["combine_bytes"],
+                                     m["combine_bytes_reduce_scatter"])
+        repl_cost = float(operand_bytes) * (n_repl - 1)
+        return {"comm_bytes": comm, "replication_cost_bytes": repl_cost,
+                "total_bytes": comm + repl_cost,
+                "n_row": n_row, "n_repl": n_repl}
+
+    candidates = {"1d": cost(total, 1)}
+    if len(shape) >= 2 and total > shape[0]:
+        candidates["1.5d"] = cost(shape[0], total // shape[0])
+    layout = min(candidates, key=lambda k: candidates[k]["total_bytes"])
+    best = candidates[layout]
+    return {"layout": layout, "n_row": best["n_row"],
+            "n_repl": best["n_repl"], "candidates": candidates}
 
 
 def tile_cost_bytes(a, i_start, i_end, j_rows, b_col, c_col, b_is_sparse,

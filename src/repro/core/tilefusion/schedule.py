@@ -66,7 +66,19 @@ class DeviceSchedule:
         """Sorted distinct D1 rows the post-barrier wavefront reads (body +
         spill).  This is the *halo* of the schedule: under a sharded
         partition these are the only rows that must cross device
-        boundaries, so the sharded executors all-gather exactly this set."""
+        boundaries, so the sharded executors all-gather exactly this set.
+
+        Memoized on the (immutable) instance — the sharded dispatch reads
+        it twice per build (layout choice, then halo tables), and the
+        O(nnz) unique scan should run once per schedule, not per read."""
+        memo = getattr(self, "_wf1_dep_rows_memo", None)
+        if memo is not None:
+            return memo
+        memo = self._wf1_dep_rows_build()
+        object.__setattr__(self, "_wf1_dep_rows_memo", memo)
+        return memo
+
+    def _wf1_dep_rows_build(self) -> np.ndarray:
         valid = self.j_rows1 < self.n_j
         parts = []
         if valid.any():

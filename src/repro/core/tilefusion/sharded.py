@@ -4,8 +4,8 @@ The paper balances locality against "sufficient workload for cores" on one
 shared-memory node; this module lifts the same tradeoff to a device mesh.
 The unit of distribution is the inspector's *fused schedule* (keeping the
 fused tile intact is what makes wavefront 0 communication-free): the
-wavefront-0 tile grid is partitioned 1-D row-block over the mesh's flattened
-device axis, with contiguous tile groups balanced by their Eq-3 cost
+wavefront-0 tile grid is partitioned row-block over the mesh's row axis,
+with contiguous tile groups balanced by their Eq-3 cost
 (``scheduler.balanced_contiguous_partition``) so every shard streams
 comparable fused-tile bytes.
 
@@ -18,21 +18,46 @@ shim):
                 tile-local and therefore shard-local.
   halo          each shard contributes the wavefront-1 dependency rows
                 (``DeviceSchedule.wf1_dep_rows``) it owns, one
-                ``all_gather`` assembles the halo table on every device
-                (``cost_model.shard_comm_model`` prices this against
-                full-D1 replication).
-  wavefront 1   wavefront-1 tiles and spill lanes are themselves
-                partitioned over shards (cost-balanced), reading the halo
-                table; the per-shard partial D outputs cover disjoint rows
-                and one ``psum`` combines them.  That full-(n_j, c_col)
-                all-reduce is the second (and for small halos the
-                dominant) communication term — priced honestly as
-                ``combine_bytes`` in the comm model; replacing it with a
-                row-remapped reduce-scatter is the ROADMAP follow-on.
+                ``all_gather`` over the row axis assembles the halo table
+                on every device (``cost_model.shard_comm_model`` prices
+                this against full-D1 replication).
+  wavefront 1   wavefront-1 tiles and spill lanes are partitioned over
+                shards (tiles cost-balanced; spill lanes co-located with
+                the shard that owns their target D row), reading the halo
+                table.
+
+Two output-combine strategies, chosen by ``cost_model.shard_comm_model``
+(``combine_bytes`` vs ``combine_bytes_reduce_scatter``) or forced by the
+caller:
+
+  ``"psum"``            every shard scatters its partial into a full
+                        ``(n_j, c_col)`` buffer and one all-reduce
+                        combines them — simple, but the full D crosses
+                        the wire to every device.
+  ``"reduce_scatter"``  the row-remapped combine: D rows are permuted so
+                        each shard *owns* one contiguous block (its wf0
+                        fused rows + its wf1 tile rows; spill lanes are
+                        co-located with their target row's owner, so the
+                        per-shard partials are owner-disjoint by
+                        construction).  Each shard emits only its own
+                        ``(rows_per_shard, c_col)`` block — the combine
+                        itself moves zero bytes; a block crosses the wire
+                        once, when the caller consumes the output through
+                        the inverse row permutation (``out_perm``).
+
+2-D meshes (the replicated 1.5D layout of Bharadwaj et al.): the leading
+mesh axis keeps the row-block partition above; the trailing axis splits
+the dense operand's *columns* into ``n_repl`` independent replica groups.
+The sparse operand, B, and the schedule's index arrays are replicated
+across the replica axis (the memory cost) while every communication term
+— halo, combine — carries only ``c_col / n_repl`` columns (the
+communication saving).  ``cost_model.choose_mesh_layout`` weighs the two
+against flattening the whole mesh into row shards (pure 1-D).
 
 Static shapes: per-shard tile counts differ, so the stacked arrays are
 padded to the max tiles/rows per shard; padded slots reuse the schedule's
-own conventions (row ``n_j`` scatter-dropped, col 0 / val 0 no-ops).
+own conventions (row ``n_j`` — or ``rows_per_shard`` for the local output
+blocks — scatter-dropped, col 0 / val 0 no-ops).
 
 The builder requires a *uniform* wavefront-0 grid (``uniform_split=True``,
 the dispatch default) — the same precondition as the Pallas kernels — so a
@@ -49,7 +74,11 @@ import numpy as np
 from ..sparse.formats import CSR, csr_content_digest
 from . import cost_model, fused_ops
 from .schedule import DeviceSchedule
-from .scheduler import Schedule, balanced_contiguous_partition
+from .scheduler import Schedule, balanced_contiguous_partition, \
+    resolve_mesh_layout
+
+#: Valid output-combine strategies (plus "auto" at the dispatch layer).
+COMBINE_MODES = ("psum", "reduce_scatter")
 
 
 def mesh_key(mesh) -> tuple | None:
@@ -74,7 +103,9 @@ class ShardedSchedule:
     leading axis (``S * per_shard``) so ``shard_map`` with ``P(axes)``
     hands each device exactly its block."""
 
-    n_shards: int
+    n_shards: int                 # row-block shards (the mesh's row axis)
+    n_repl: int                   # column replicas (1 = pure 1-D layout)
+    combine: str                  # "psum" | "reduce_scatter"
     t_pad: int
     n_i: int
     n_j: int
@@ -101,19 +132,40 @@ class ShardedSchedule:
     send_per_shard: int           # Hs (padded)
     send_local: np.ndarray        # (S*Hs,) shard-local padded row, pad = 0
     send_pos: np.ndarray          # (S, Hs) halo-table position, pad = H
+    # output ownership (the reduce-scatter row remap): every D row is
+    # owned by the one shard that writes it — wf0 fused rows by their
+    # tile's shard, wf1 rows by their wf1 tile's shard
+    rows_per_shard: int           # R: padded owned rows per shard
+    out_perm: np.ndarray          # (n_j,) permuted block position of row j
+    out_rows0: np.ndarray         # (S*T0s, j0_max) shard-local out, pad = R
+    out_rows1: np.ndarray         # (S*T1s, j1_max) shard-local out, pad = R
+    out_spill: np.ndarray         # (S*L,) shard-local out, pad = R
     #: ``cost_model.shard_comm_model`` of this partition (halo all-gather
-    #: bytes vs full-D1 replication) — surfaced through the schedule
-    #: entry's traffic model.
+    #: bytes vs full-D1 replication; psum vs reduce-scatter combine) —
+    #: surfaced through the schedule entry's traffic model.
     comm_model: dict = dataclasses.field(default_factory=dict)
 
     @property
     def halo_size(self) -> int:
         return int(self.halo_rows.shape[0])
 
+    @property
+    def layout(self) -> str:
+        """"1d" (row shards only) or "1.5d" (column replicas too)."""
+        return "1d" if self.n_repl == 1 else "1.5d"
+
     def shard_tile_counts(self) -> np.ndarray:
         """Real (unpadded) wavefront-0 tiles per shard — the balance the
         Eq-3 partition produced, pinned by tests."""
         return np.diff(self.tile_bounds)
+
+    def shard_owned_counts(self) -> np.ndarray:
+        """Real (unpadded) owned output rows per shard — the row blocks of
+        the reduce-scatter combine, disjoint and exhaustive over D."""
+        pos = np.sort(self.out_perm)
+        bounds = np.searchsorted(pos, np.arange(self.n_shards + 1)
+                                 * self.rows_per_shard)
+        return np.diff(bounds)
 
 
 def _pad_gather(src: np.ndarray, idx: np.ndarray, pad_value) -> np.ndarray:
@@ -135,23 +187,76 @@ def _remap_to_halo(cols: np.ndarray, halo_rows: np.ndarray) -> np.ndarray:
     return np.where(hit, pos, 0).astype(np.int32)
 
 
-def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
-                           n_shards: int, *, b_col: int, c_col: int,
-                           b_is_sparse: bool,
-                           width_cap: int | None = None):
-    """Partition a uniform schedule over ``n_shards`` devices.
+def _owner_of_tiles(bounds: np.ndarray, tile_ids: np.ndarray,
+                    n_shards: int) -> np.ndarray:
+    """Owning shard of each tile id under contiguous ``bounds``."""
+    own = np.searchsorted(bounds, tile_ids, side="right") - 1
+    return np.clip(own, 0, n_shards - 1)
 
-    Returns ``None`` when the schedule is not a uniform wavefront-0 grid
-    (the caller falls back to single-device dispatch)."""
-    if n_shards <= 1 or not fused_ops._is_uniform(dsched):
+
+def _pack_by_group(owners: np.ndarray, n_groups: int) -> tuple:
+    """Pack items into equal-stride per-group slots — the one packing rule
+    behind the halo send tables, the output-ownership permutation, and the
+    spill-lane co-location.
+
+    Returns ``(counts, stride, order, dst)``: item ``order[k]`` lands at
+    flat slot ``dst[k] = group * stride + rank_within_group`` where
+    ``stride = max(counts, 1)`` (so every group's block is padded to the
+    same height) and ``order`` walks the items in stable group order."""
+    owners = np.asarray(owners, dtype=np.int64)
+    counts = np.bincount(owners, minlength=n_groups)
+    stride = max(int(counts.max()) if owners.size else 0, 1)
+    order = np.argsort(owners, kind="stable")
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    dst = (np.repeat(np.arange(n_groups, dtype=np.int64), counts) * stride
+           + np.arange(owners.size, dtype=np.int64)
+           - np.repeat(offsets[:-1], counts))
+    return counts, stride, order, dst
+
+
+def _local_out_rows(stacked_rows: np.ndarray, shard_of: np.ndarray,
+                    pos_of_row: np.ndarray, n_j: int,
+                    r_per: int) -> np.ndarray:
+    """Shard-local output positions for a stacked global-row array: real
+    rows map to ``pos_of_row - shard * R`` (in [0, R) — every row in a
+    shard's stack is owned by that shard), pad slots map to ``R``
+    (scatter-dropped)."""
+    if stacked_rows.size == 0 or n_j == 0:
+        return np.full(stacked_rows.shape, r_per, np.int32)
+    real = stacked_rows < n_j
+    safe = np.minimum(stacked_rows, max(n_j - 1, 0))
+    loc = pos_of_row[safe] - shard_of.reshape(
+        shard_of.shape + (1,) * (stacked_rows.ndim - shard_of.ndim)) * r_per
+    return np.where(real, loc, r_per).astype(np.int32)
+
+
+def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
+                           mesh_shape, *, b_col: int, c_col: int,
+                           b_is_sparse: bool,
+                           width_cap: int | None = None,
+                           layout: str = "1d",
+                           combine: str = "auto"):
+    """Partition a uniform schedule over a mesh shape (an int or a shape
+    tuple) under a layout — ``scheduler.resolve_mesh_layout`` is the one
+    place the shape becomes (row shards × column replicas).
+
+    ``combine`` picks the output-combine strategy (``"auto"`` defers to
+    ``shard_comm_model``'s byte pricing).  Returns ``None`` when the
+    schedule is not a uniform wavefront-0 grid (the caller falls back to
+    single-device dispatch)."""
+    if combine not in COMBINE_MODES + ("auto",):
+        raise ValueError(f"combine={combine!r}; expected one of "
+                         f"{COMBINE_MODES + ('auto',)}")
+    s_n, n_repl = resolve_mesh_layout(mesh_shape, layout)
+    if s_n * n_repl <= 1 or not fused_ops._is_uniform(dsched):
         return None
-    s_n = int(n_shards)
     t = dsched.t_pad
     n_t = dsched.n_tiles0
     n_j = dsched.n_j
     wf0, wf1 = sched.wavefronts
 
-    # ---- wavefront 0: Eq-3-balanced contiguous tile partition ----
+    # ---- wavefront 0: Eq-3-balanced contiguous tile partition over the
+    # mesh's row axis (replica groups share tiles) ----
     costs0 = cost_model.tile_costs_batch(
         a, [tl.i_start for tl in wf0], [tl.i_end for tl in wf0],
         [tl.j_rows for tl in wf0], b_col, c_col, b_is_sparse,
@@ -181,20 +286,18 @@ def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
     if h:
         owner = np.searchsorted(row_bounds, halo_rows, side="right") - 1
         owner = np.clip(owner, 0, s_n - 1)
-        counts = np.bincount(owner, minlength=s_n)
-        hs = max(int(counts.max()), 1)
-        offsets = np.concatenate([[0], np.cumsum(counts)])
-        # halo_rows is sorted and ownership is contiguous, so rows of one
-        # shard are consecutive; slot = rank within the shard's run
-        slot = np.arange(h, dtype=np.int64) - offsets[owner]
-        send_local = np.zeros((s_n, hs), dtype=np.int32)
-        send_pos = np.full((s_n, hs), h, dtype=np.int32)
-        send_local[owner, slot] = (halo_rows - row_bounds[owner]).astype(
-            np.int32)
-        send_pos[owner, slot] = np.arange(h, dtype=np.int32)
+        # halo_rows is sorted and ownership is contiguous, so the stable
+        # group order is the identity: slot = rank within the shard's run
+        _, hs, h_ord, h_dst = _pack_by_group(owner, s_n)
+        send_local = np.zeros(s_n * hs, dtype=np.int32)
+        send_pos = np.full(s_n * hs, h, dtype=np.int32)
+        send_local[h_dst] = (halo_rows - row_bounds[owner]).astype(
+            np.int32)[h_ord]
+        send_pos[h_dst] = np.arange(h, dtype=np.int32)[h_ord]
+        send_pos = send_pos.reshape(s_n, hs)
     else:
         hs = 1
-        send_local = np.zeros((s_n, 1), dtype=np.int32)
+        send_local = np.zeros(s_n * 1, dtype=np.int32)
         send_pos = np.full((s_n, 1), 0, dtype=np.int32)
 
     # ---- wavefront 1: cost-balanced tile partition + halo remap ----
@@ -217,32 +320,72 @@ def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
         vals1 = _pad_gather(dsched.ell_vals1, tmap1, 0)
         cols1 = _remap_to_halo(cols1, halo_rows)
     else:
+        bounds1 = np.zeros(s_n + 1, dtype=np.int64)
         t1s = 0
         j_rows1 = np.full((0, 1), n_j, dtype=np.int32)
         cols1 = np.zeros((0, 1, 1), dtype=np.int32)
         vals1 = np.zeros((0, 1, 1), dtype=np.float32)
 
-    # ---- spill lanes: even split (each lane is one scatter-add) ----
+    # ---- output ownership: row -> owning shard -> permuted position ----
+    # Every D row is written by exactly one tile (Schedule.validate), so
+    # the per-shard write sets are disjoint and exhaustive: wf0 fused rows
+    # belong to their tile's shard, wf1 rows to their wf1 tile's shard.
+    own_row = np.zeros(max(n_j, 1), dtype=np.int64)
+    sizes0 = np.asarray([tl.n_j for tl in wf0], dtype=np.int64)
+    if sizes0.sum():
+        j0_all = np.concatenate([tl.j_rows for tl in wf0]).astype(np.int64)
+        t0_of = np.repeat(np.arange(len(wf0), dtype=np.int64), sizes0)
+        own_row[j0_all] = _owner_of_tiles(tile_bounds, t0_of, s_n)
+    if n_t1:
+        sizes1 = np.asarray([tl.n_j for tl in wf1], dtype=np.int64)
+        j1_all = np.concatenate([tl.j_rows for tl in wf1]).astype(np.int64)
+        t1_of = np.repeat(np.arange(n_t1, dtype=np.int64), sizes1)
+        own_row[j1_all] = _owner_of_tiles(bounds1, t1_of, s_n)
+    own_row = own_row[:n_j]
+    _, r_per, o_ord, o_dst = _pack_by_group(own_row, s_n)
+    pos_of_row = np.empty(n_j, dtype=np.int64)
+    pos_of_row[o_ord] = o_dst
+
+    shard_of0 = np.repeat(np.arange(s_n, dtype=np.int64), t0s)
+    out_rows0 = _local_out_rows(j_rows0, shard_of0, pos_of_row, n_j, r_per)
+    if t1s:
+        shard_of1 = np.repeat(np.arange(s_n, dtype=np.int64), t1s)
+        out_rows1 = _local_out_rows(j_rows1, shard_of1, pos_of_row, n_j,
+                                    r_per)
+    else:
+        out_rows1 = np.full(j_rows1.shape, r_per, dtype=np.int32)
+
+    # ---- spill lanes: co-located with their target row's owner (the
+    # shard whose wf1 tile wrote the body, so the reduce-scatter partials
+    # stay owner-disjoint and the body .set always precedes the .add) ----
     n_sp = int(dsched.spill_rows1.shape[0])
-    sp_l = -(-n_sp // s_n) if n_sp else 0
-    spill_rows = np.full(s_n * max(sp_l, 1) if n_sp else 0, n_j, np.int32)
-    spill_cols = np.zeros(spill_rows.shape[0], np.int32)
-    spill_vals = np.zeros(spill_rows.shape[0], np.float32)
     if n_sp:
         sp_remap = _remap_to_halo(dsched.spill_cols1, halo_rows)
-        for s in range(s_n):
-            lo, hi_ = s * sp_l, min((s + 1) * sp_l, n_sp)
-            if lo >= n_sp:
-                break
-            dst = s * sp_l
-            spill_rows[dst: dst + hi_ - lo] = dsched.spill_rows1[lo:hi_]
-            spill_cols[dst: dst + hi_ - lo] = sp_remap[lo:hi_]
-            spill_vals[dst: dst + hi_ - lo] = dsched.spill_vals1[lo:hi_]
+        sp_owner = own_row[dsched.spill_rows1.astype(np.int64)]
+        _, sp_l, sp_order, dst = _pack_by_group(sp_owner, s_n)
+        spill_rows = np.full(s_n * sp_l, n_j, np.int32)
+        spill_cols = np.zeros(s_n * sp_l, np.int32)
+        spill_vals = np.zeros(s_n * sp_l, np.float32)
+        spill_rows[dst] = dsched.spill_rows1[sp_order]
+        spill_cols[dst] = sp_remap[sp_order]
+        spill_vals[dst] = dsched.spill_vals1[sp_order]
+        out_spill = np.full(s_n * sp_l, r_per, np.int32)
+        out_spill[dst] = (pos_of_row[dsched.spill_rows1[sp_order].astype(
+            np.int64)] - sp_owner[sp_order] * r_per).astype(np.int32)
+    else:
+        sp_l = 0
+        spill_rows = np.zeros(0, np.int32)
+        spill_cols = np.zeros(0, np.int32)
+        spill_vals = np.zeros(0, np.float32)
+        out_spill = np.zeros(0, np.int32)
 
     comm = cost_model.shard_comm_model(s_n, h, dsched.n_i, c_col,
-                                       n_j=n_j)
+                                       n_j=n_j, n_repl=n_repl,
+                                       combine_rows=s_n * r_per)
+    mode = comm["combine"] if combine == "auto" else combine
     return ShardedSchedule(
-        n_shards=s_n, t_pad=t, n_i=dsched.n_i, n_j=n_j, n_tiles0=n_t,
+        n_shards=s_n, n_repl=n_repl, combine=mode,
+        t_pad=t, n_i=dsched.n_i, n_j=n_j, n_tiles0=n_t,
         tiles_per_shard=t0s, tile_bounds=tile_bounds, tile_map=tile_map,
         row_map=row_map,
         j_rows0=j_rows0, ell_cols0=ell_cols0, ell_vals0=ell_vals0,
@@ -252,6 +395,8 @@ def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
         spill_cols1=spill_cols, spill_vals1=spill_vals,
         halo_rows=halo_rows, send_per_shard=hs,
         send_local=send_local.reshape(-1), send_pos=send_pos,
+        rows_per_shard=r_per, out_perm=pos_of_row,
+        out_rows0=out_rows0, out_rows1=out_rows1, out_spill=out_spill,
         comm_model=comm,
     )
 
@@ -278,59 +423,81 @@ def _shard_executor(shard: ShardedSchedule, mesh, kind: str):
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
-    from ...models.sharding import shard_map
+    from ...models.sharding import mesh_row_repl_axes, shard_map
 
-    axes = tuple(mesh.axis_names)
-    sh = P(axes)            # leading dim carries the flattened shard axis
-    rep = P()
+    row_axes, repl_axes = mesh_row_repl_axes(mesh, shard.layout)
+    mesh_sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+    if (int(np.prod([mesh_sizes[ax] for ax in row_axes])) != shard.n_shards
+            or int(np.prod([mesh_sizes[ax] for ax in repl_axes] or [1]))
+            != shard.n_repl):
+        raise ValueError(
+            f"mesh shape {dict(mesh_sizes)} does not match the schedule's "
+            f"{shard.n_shards}x{shard.n_repl} ({shard.layout}) partition")
+    sh = P(row_axes)        # leading dim carries the row-shard axis
+    rep = P(None, repl_axes) if repl_axes else P()       # column replicas
+    sh_col = P(row_axes, repl_axes) if repl_axes else P(row_axes)
+    reduce_scatter = shard.combine == "reduce_scatter"
     t, t0s = shard.t_pad, shard.tiles_per_shard
     t1s, sp_l = shard.wf1_per_shard, shard.spill_per_shard
     n_j, h = shard.n_j, shard.halo_size
+    r_per = shard.rows_per_shard
+    # local output-buffer height and scatter targets per combine mode: the
+    # psum arm scatters global D rows into a full (n_j, cc) partial and
+    # all-reduces; the reduce-scatter arm scatters shard-local owned
+    # positions into the shard's own (R, cc) block and emits it directly
+    out_n = r_per if reduce_scatter else n_j
+    rows0_np = shard.out_rows0 if reduce_scatter else shard.j_rows0
+    rows1_np = shard.out_rows1 if reduce_scatter else shard.j_rows1
+    srows_np = shard.out_spill if reduce_scatter else shard.spill_rows1
     # index arrays are dtype-independent: convert (and upload) once at
     # build time, not per call — only the value arrays depend on the
     # operands' dtype and get their own tiny per-dtype memo below
     send_pos = jnp.asarray(shard.send_pos)           # replicated constant
-    idx_args = (jnp.asarray(shard.j_rows0), jnp.asarray(shard.ell_cols0),
-                jnp.asarray(shard.j_rows1), jnp.asarray(shard.ell_cols1),
-                jnp.asarray(shard.spill_rows1),
+    idx_args = (jnp.asarray(rows0_np), jnp.asarray(shard.ell_cols0),
+                jnp.asarray(rows1_np), jnp.asarray(shard.ell_cols1),
+                jnp.asarray(srows_np),
                 jnp.asarray(shard.spill_cols1),
                 jnp.asarray(shard.send_local))
     vals_by_dtype: dict = {}
 
-    def wf1_and_combine(d, d1_local, j_rows1_s, cols1_s, vals1_s,
+    def wf1_and_combine(d, d1_local, rows1_s, cols1_s, vals1_s,
                         srows_s, scols_s, svals_s, send_local_s):
-        """Halo all-gather + this shard's wavefront-1 share, then psum."""
+        """Halo all-gather (row axis only) + this shard's wavefront-1
+        share, then the combine: psum over the row axis, or — when the
+        partials are owner-disjoint — emit the shard's own block."""
         c_col = d.shape[1]
         if h:
             contrib = d1_local[send_local_s]              # (Hs, c_col)
-            gathered = jax.lax.all_gather(contrib, axes)  # (S, Hs, c_col)
+            gathered = jax.lax.all_gather(contrib, row_axes)
             halo = jnp.zeros((h, c_col), d.dtype).at[
                 send_pos.reshape(-1)].set(
                 gathered.reshape(-1, c_col), mode="drop")
             if t1s:
                 rows1 = fused_ops._ell_rows(cols1_s, vals1_s, halo)
-                d = d.at[j_rows1_s.reshape(-1)].set(
+                d = d.at[rows1_s.reshape(-1)].set(
                     rows1.reshape(-1, c_col), mode="drop")
             if sp_l:
                 d = d.at[srows_s].add(
                     svals_s.astype(d.dtype)[:, None] * halo[scols_s])
-        return jax.lax.psum(d, axes)
+        if reduce_scatter:
+            return d
+        return jax.lax.psum(d, row_axes)
 
-    def per_shard_gemm(b_blk, c, j_rows0_s, cols0_s, vals0_s, j_rows1_s,
+    def per_shard_gemm(b_blk, c, rows0_s, cols0_s, vals0_s, rows1_s,
                        cols1_s, vals1_s, srows_s, scols_s, svals_s,
                        send_local_s):
         c_col = c.shape[1]
         d1_t = b_blk.reshape(t0s, t, -1) @ c              # (T0s, t, c_col)
         rows0 = jax.vmap(fused_ops._ell_rows)(cols0_s, vals0_s, d1_t)
-        d = jnp.zeros((n_j, c_col), c.dtype).at[
-            j_rows0_s.reshape(-1)].set(rows0.reshape(-1, c_col),
-                                       mode="drop")
-        return wf1_and_combine(d, d1_t.reshape(t0s * t, c_col), j_rows1_s,
+        d = jnp.zeros((out_n, c_col), c.dtype).at[
+            rows0_s.reshape(-1)].set(rows0.reshape(-1, c_col),
+                                     mode="drop")
+        return wf1_and_combine(d, d1_t.reshape(t0s * t, c_col), rows1_s,
                                cols1_s, vals1_s, srows_s, scols_s, svals_s,
                                send_local_s)
 
-    def per_shard_spmm(o_cols_s, o_vals_s, d1_spill_s, c, j_rows0_s,
-                       cols0_s, vals0_s, j_rows1_s, cols1_s, vals1_s,
+    def per_shard_spmm(o_cols_s, o_vals_s, d1_spill_s, c, rows0_s,
+                       cols0_s, vals0_s, rows1_s, cols1_s, vals1_s,
                        srows_s, scols_s, svals_s, send_local_s):
         c_col = c.shape[1]
         # op-1 SpMM per tile: hybrid ELL body over replicated C + the
@@ -338,21 +505,25 @@ def _shard_executor(shard: ShardedSchedule, mesh, kind: str):
         d1_t = fused_ops._ell_rows(o_cols_s, o_vals_s, c) \
             + d1_spill_s.reshape(t0s, t, c_col)
         rows0 = jax.vmap(fused_ops._ell_rows)(cols0_s, vals0_s, d1_t)
-        d = jnp.zeros((n_j, c_col), c.dtype).at[
-            j_rows0_s.reshape(-1)].set(rows0.reshape(-1, c_col),
-                                       mode="drop")
-        return wf1_and_combine(d, d1_t.reshape(t0s * t, c_col), j_rows1_s,
+        d = jnp.zeros((out_n, c_col), c.dtype).at[
+            rows0_s.reshape(-1)].set(rows0.reshape(-1, c_col),
+                                     mode="drop")
+        return wf1_and_combine(d, d1_t.reshape(t0s * t, c_col), rows1_s,
                                cols1_s, vals1_s, srows_s, scols_s, svals_s,
                                send_local_s)
 
     if kind == "gemm":
-        body, n_sharded_lead = per_shard_gemm, 1
+        body = per_shard_gemm
+        lead_specs = (sh, rep)
     else:
-        body, n_sharded_lead = per_shard_spmm, 3
-    # operand specs: leading sharded inputs, then replicated C, then the
-    # schedule's 10 stacked index arrays (all sharded on dim 0)
-    in_specs = (sh,) * n_sharded_lead + (rep,) + (sh,) * 10
-    mapped = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=rep)
+        body = per_shard_spmm
+        lead_specs = (sh, sh, sh_col, rep)
+    # operand specs: leading op inputs, then the schedule's 10 stacked
+    # index arrays (all sharded over the row axis on dim 0)
+    in_specs = lead_specs + (sh,) * 10
+    out_specs = sh_col if reduce_scatter else rep
+    mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs)
     fn = jax.jit(mapped)
 
     def run(*operands):
@@ -363,9 +534,9 @@ def _shard_executor(shard: ShardedSchedule, mesh, kind: str):
                     jnp.asarray(shard.ell_vals1, dtype),
                     jnp.asarray(shard.spill_vals1, dtype))
             vals_by_dtype[dtype] = vals
-        j_rows0, cols0, j_rows1_a, cols1_a, srows, scols, send_local = \
+        rows0, cols0, rows1_a, cols1_a, srows, scols, send_local = \
             idx_args
-        args = operands + (j_rows0, cols0, vals[0], j_rows1_a, cols1_a,
+        args = operands + (rows0, cols0, vals[0], rows1_a, cols1_a,
                            vals[1], srows, scols, vals[2], send_local)
         return fn(*args)
 
@@ -373,14 +544,40 @@ def _shard_executor(shard: ShardedSchedule, mesh, kind: str):
     return run
 
 
-def _row_map_device(shard: ShardedSchedule):
-    """``shard.row_map`` as a device array, uploaded once per schedule."""
+def _device_const(shard: ShardedSchedule, attr: str):
+    """A ShardedSchedule index array as a device array, uploaded once per
+    schedule (memoized on the frozen instance)."""
     import jax.numpy as jnp
-    rm = getattr(shard, "_row_map_jax", None)
-    if rm is None:
-        rm = jnp.asarray(shard.row_map)
-        object.__setattr__(shard, "_row_map_jax", rm)
-    return rm
+    cache_attr = f"_{attr}_jax"
+    arr = getattr(shard, cache_attr, None)
+    if arr is None:
+        arr = jnp.asarray(getattr(shard, attr))
+        object.__setattr__(shard, cache_attr, arr)
+    return arr
+
+
+def _pad_cols(c, n_repl: int):
+    """Pad C's trailing dim to a multiple of ``n_repl`` so the replica
+    axis splits it evenly; callers slice the padding back off the output."""
+    import jax.numpy as jnp
+    cc = int(c.shape[1])
+    cc_pad = -(-cc // n_repl) * n_repl
+    if cc_pad != cc:
+        c = jnp.pad(c, ((0, 0), (0, cc_pad - cc)))
+    return c, cc
+
+
+def _finish(shard: ShardedSchedule, out, c_col: int):
+    """Post-executor output assembly: the reduce-scatter arm's permuted
+    owner blocks are mapped back to D's row order (one gather — each
+    owned block crosses the wire once, the byte count
+    ``combine_bytes_reduce_scatter`` prices), and column padding from the
+    replica split is sliced off."""
+    if shard.combine == "reduce_scatter":
+        out = out[_device_const(shard, "out_perm")]
+    if int(out.shape[1]) != c_col:
+        out = out[:, :c_col]
+    return out
 
 
 def sharded_gemm_spmm(shard: ShardedSchedule, mesh, b, c):
@@ -390,11 +587,12 @@ def sharded_gemm_spmm(shard: ShardedSchedule, mesh, b, c):
     if b.shape[0] != shard.n_i:
         raise ValueError(f"b has {b.shape[0]} rows, schedule expects "
                          f"{shard.n_i}")
+    c, c_col = _pad_cols(jnp.asarray(c), shard.n_repl)
     n_pad = shard.n_tiles0 * shard.t_pad
     b_pad = jnp.pad(b, ((0, n_pad - b.shape[0]), (0, 0)))
-    b_blk = b_pad[_row_map_device(shard)]         # (S*T0s*t, b_col)
+    b_blk = b_pad[_device_const(shard, "row_map")]    # (S*T0s*t, b_col)
     run = _shard_executor(shard, mesh, "gemm")
-    return run(b_blk, jnp.asarray(c))
+    return _finish(shard, run(b_blk, c), c_col)
 
 
 def _op1_sharded(shard: ShardedSchedule, dsched: DeviceSchedule, a1: CSR,
@@ -436,14 +634,15 @@ def sharded_spmm_spmm(shard: ShardedSchedule, dsched: DeviceSchedule,
     if c.shape[0] != a1.n_cols:
         raise ValueError(f"c has {c.shape[0]} rows, op-1 has {a1.n_cols} "
                          f"columns")
-    c_col = c.shape[1]
+    c, c_col = _pad_cols(c, shard.n_repl)
+    cc_pad = c.shape[1]
     o_cols_s, o_vals_s, n_spill, spill_flat, spill_cols, spill_vals = \
         _op1_sharded(shard, dsched, a1, c.dtype)
     n_pad = shard.n_tiles0 * shard.t_pad
-    d1_spill = jnp.zeros((n_pad, c_col), c.dtype)
+    d1_spill = jnp.zeros((n_pad, cc_pad), c.dtype)
     if n_spill:
         d1_spill = d1_spill.at[spill_flat].add(
             spill_vals.astype(c.dtype)[:, None] * c[spill_cols])
-    d1_spill_blk = d1_spill[_row_map_device(shard)]
+    d1_spill_blk = d1_spill[_device_const(shard, "row_map")]
     run = _shard_executor(shard, mesh, "spmm")
-    return run(o_cols_s, o_vals_s, d1_spill_blk, c)
+    return _finish(shard, run(o_cols_s, o_vals_s, d1_spill_blk, c), c_col)

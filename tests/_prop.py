@@ -13,9 +13,23 @@ from __future__ import annotations
 __all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
 
 try:
+    import os as _os
+
     from hypothesis import given, settings
     from hypothesis import strategies as st
     HAVE_HYPOTHESIS = True
+
+    # Deterministic profile, loaded by default wherever hypothesis IS
+    # installed: fixed derivation instead of random exploration, bounded
+    # example counts, no wall-clock deadline flakes, no cross-run example
+    # database — a property failure then reproduces by test id alone,
+    # matching the no-hypothesis fallback's seeded parametrize sweeps.
+    # Opt back into exploratory runs with REPRO_HYPOTHESIS_PROFILE=default
+    # (or any other registered profile name).
+    settings.register_profile(
+        "ci", settings(derandomize=True, max_examples=16, deadline=None,
+                       database=None))
+    settings.load_profile(_os.environ.get("REPRO_HYPOTHESIS_PROFILE", "ci"))
 except ImportError:
     HAVE_HYPOTHESIS = False
 

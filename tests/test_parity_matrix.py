@@ -29,15 +29,29 @@ from repro.core.sparse.random import (banded_spd, block_diag_noise,
                                       hub_powerlaw, powerlaw_graph)
 from repro.core.tilefusion import api, fused_ref
 
-#: Explicit override backends plus the numpy schedule-walking oracle.
-BACKENDS = ("pallas", "xla", "unfused", "sharded", "reference")
 KNOBS = dict(p=2, cache_size=30_000.0, ct_size=32)
 
+#: Sharded cells: the flattened 1-D mesh always; 2-D factorizations (row
+#: shards × column replicas under ``shard_layout="auto"``) join on the
+#: forced-8-device CI leg so every op-pair × pattern also runs the 4×2
+#: and 2×4 partitions.
+SHARDED_CELLS = {"sharded": None}
+if len(jax.devices()) >= 8:
+    SHARDED_CELLS["sharded-4x2"] = (4, 2)
+    SHARDED_CELLS["sharded-2x4"] = (2, 4)
 
-def _host_mesh() -> Mesh:
+#: Explicit override backends plus the numpy schedule-walking oracle.
+BACKENDS = ("pallas", "xla", "unfused", *SHARDED_CELLS, "reference")
+
+
+def _host_mesh(shape=None) -> Mesh:
     """All of this platform's devices on one 1-D axis (8 on the CI
-    multi-device leg, 1 on a plain run — the trivial-mesh fallback)."""
-    return Mesh(np.array(jax.devices()), ("shards",))
+    multi-device leg, 1 on a plain run — the trivial-mesh fallback), or a
+    2-D mesh of the given shape over a device subset."""
+    if shape is None:
+        return Mesh(np.array(jax.devices()), ("shards",))
+    n = int(np.prod(shape))
+    return Mesh(np.array(jax.devices()[:n]).reshape(shape), ("x", "y"))
 
 
 def _empty_rows(n: int, seed: int) -> CSR:
@@ -79,8 +93,9 @@ def _run_cell(a: CSR, op_pair: str, backend: str, c_col: int,
             want = fused_ref.unfused_gemm_spmm(a, b, c_ge)
         return np.asarray(got), want
     kwargs = dict(KNOBS)
-    if backend == "sharded":
-        kwargs["mesh"] = _host_mesh()
+    if backend in SHARDED_CELLS:
+        kwargs["mesh"] = _host_mesh(SHARDED_CELLS[backend])
+        backend = "sharded"
     if op_pair == "spmm":
         got = api.tile_fused_matmul(a, a, jnp.asarray(c_sp, jnp.float32),
                                     backend=backend, **kwargs)
@@ -105,6 +120,45 @@ def test_parity_cell(op_pair, pattern, seed, c_col):
         np.testing.assert_allclose(
             got, want, rtol=2e-3, atol=2e-3,
             err_msg=f"{op_pair}/{backend}/{pattern}/seed{seed}")
+
+
+@pytest.mark.parametrize("op_pair", ["gemm", "spmm"])
+def test_reduce_scatter_combine_matches_psum(op_pair):
+    """The row-remapped reduce-scatter combine is numerically equivalent to
+    the full-D psum it replaces: same per-row arithmetic, only the combine
+    collective differs — so the two runs must agree to float roundoff, on
+    every mesh this platform expresses (trivial fallback included)."""
+    a = hub_powerlaw(96, 4, seed=1)        # hub row: spill lanes cross too
+    rng = np.random.default_rng(1)
+    outs = {}
+    for combine in ("psum", "reduce_scatter"):
+        mesh = _host_mesh()
+        kwargs = dict(KNOBS, mesh=mesh, backend="sharded",
+                      shard_combine=combine)
+        if op_pair == "spmm":
+            c = rng.standard_normal((96, 8))
+            got = api.tile_fused_matmul(a, a, jnp.asarray(c, jnp.float32),
+                                        **kwargs)
+            want = fused_ref.unfused_spmm_spmm(a, a, c)
+        else:
+            b = rng.standard_normal((96, 8))
+            c = rng.standard_normal((8, 8))
+            got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                                        jnp.asarray(c, jnp.float32),
+                                        **kwargs)
+            want = fused_ref.unfused_gemm_spmm(a, b, c)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3,
+                                   atol=2e-3, err_msg=combine)
+        outs[combine] = np.asarray(got)
+        if len(jax.devices()) > 1:
+            entry = api.get_schedule(
+                a, b_col=8, c_col=8, b_is_sparse=(op_pair == "spmm"),
+                mesh=mesh, shard_combine=combine, **KNOBS)
+            assert entry.shard is not None
+            assert entry.shard.combine == combine
+        rng = np.random.default_rng(1)     # same operands for both modes
+    np.testing.assert_allclose(outs["reduce_scatter"], outs["psum"],
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_hub_row_spills_under_auto_cap():

@@ -67,6 +67,27 @@ def test_balanced_partition_empty():
     assert bounds.shape == (5,) and (bounds == 0).all()
 
 
+def test_mesh_partition_resolves_layouts():
+    """The 2-D-aware front end: one layout rule decides row shards vs
+    column replicas, and the row bounds follow it."""
+    from repro.core.tilefusion.scheduler import (balanced_mesh_partition,
+                                                 resolve_mesh_layout)
+    costs = np.ones(8)
+    # 1d flattens every axis into row shards
+    bounds, n_row, n_repl = balanced_mesh_partition(costs, (4, 2), "1d")
+    assert (n_row, n_repl) == (8, 1) and bounds.shape == (9,)
+    # 1.5d partitions over the leading axis only
+    bounds, n_row, n_repl = balanced_mesh_partition(costs, (4, 2), "1.5d")
+    assert (n_row, n_repl) == (4, 2) and bounds.shape == (5,)
+    assert np.diff(bounds).sum() == 8
+    # degenerate cases resolve to pure 1-D; bad layouts fail loudly
+    assert resolve_mesh_layout((8,), "1.5d") == (8, 1)
+    assert resolve_mesh_layout(8, "1d") == (8, 1)
+    assert resolve_mesh_layout((4, 1), "1.5d") == (4, 1)
+    with pytest.raises(ValueError):
+        resolve_mesh_layout((4, 2), "2.5d")
+
+
 def test_shard_comm_model_prices_halo_vs_replication():
     m = shard_comm_model(8, halo_rows=16, n_i=256, c_col=8, n_j=512)
     assert m["halo_bytes"] < m["replicate_bytes"]
@@ -75,10 +96,63 @@ def test_shard_comm_model_prices_halo_vs_replication():
     # for small halos, and priced on n_j (D rows), not n_i
     assert m["combine_bytes"] == 512 * 8 * 4 * (7 / 8) * 8
     assert m["combine_bytes"] > m["halo_bytes"]
+    # the row-remapped reduce-scatter moves each owned block once instead
+    # of every row to every device: strictly cheaper on a multi-shard mesh
+    assert m["combine_bytes_reduce_scatter"] < m["combine_bytes"]
+    assert m["combine"] == "reduce_scatter"
+    assert m["layout"] == "1d" and m["n_repl"] == 1
     # single shard: no remote bytes at all
     m1 = shard_comm_model(1, halo_rows=16, n_i=256, c_col=8)
     assert m1["halo_bytes"] == 0.0 and m1["replicate_bytes"] == 0.0
     assert m1["combine_bytes"] == 0.0
+    assert m1["combine_bytes_reduce_scatter"] == 0.0
+
+
+def test_shard_comm_model_combine_preference_monotone():
+    """``shard_comm_model`` must prefer the reduce-scatter combine exactly
+    when the psum's combine bytes dominate — and the preference gap must
+    grow monotonically with the output size that drives those bytes
+    (synthetic byte-count fixtures, no devices needed)."""
+    gaps = []
+    for n_j in (64, 256, 1024, 4096):
+        m = shard_comm_model(8, halo_rows=4, n_i=4096, c_col=32, n_j=n_j,
+                             combine_rows=n_j + 8)    # ≈ n_j, padded
+        # combine dominates the halo by construction
+        assert m["combine_bytes"] > m["halo_bytes"]
+        assert m["combine"] == "reduce_scatter"
+        gaps.append(m["combine_bytes"] - m["combine_bytes_reduce_scatter"])
+    assert all(g2 > g1 for g1, g2 in zip(gaps, gaps[1:]))
+    # degenerate ownership (one shard owns everything, maximal padding):
+    # reduce-scatter buys nothing, psum keeps the simpler collective
+    worst = shard_comm_model(8, halo_rows=4, n_i=64, c_col=32, n_j=64,
+                             combine_rows=64 * 8)
+    assert worst["combine"] == "psum"
+
+
+def test_choose_mesh_layout_prefers_replication_when_halo_dominates():
+    """``choose_mesh_layout`` must flip a 2-D mesh from pure-1D to the
+    replicated 1.5D layout exactly when the halo bytes it saves outgrow
+    the operand copies it costs — monotonically in the halo size."""
+    from repro.core.tilefusion.cost_model import choose_mesh_layout
+
+    def pick(halo_rows):
+        return choose_mesh_layout((4, 2), halo_rows=halo_rows, n_i=4096,
+                                  n_j=4096, c_col=64,
+                                  operand_bytes=64 * 1024 * 1024)
+
+    layouts = [pick(h)["layout"] for h in (0, 64, 4096 * 4, 4096 * 64)]
+    assert layouts[0] == "1d"              # nothing to save: don't copy A/B
+    assert layouts[-1] == "1.5d"           # halo dominates: replicate
+    # monotone: once replication pays, more halo never flips it back
+    flips = [a != b for a, b in zip(layouts, layouts[1:])]
+    assert sum(flips) <= 1
+    # 1-D meshes have no replication axis to choose
+    assert choose_mesh_layout((8,), halo_rows=10**9, n_i=4096, n_j=4096,
+                              c_col=64, operand_bytes=1.0)["layout"] == "1d"
+    # candidates expose both prices for the benchmark's derived columns
+    cands = pick(4096 * 64)["candidates"]
+    assert cands["1.5d"]["comm_bytes"] < cands["1d"]["comm_bytes"]
+    assert cands["1.5d"]["replication_cost_bytes"] > 0.0
 
 
 # --------------------------------------------------------------------------
@@ -286,6 +360,30 @@ np.testing.assert_allclose(np.asarray(got),
                            rtol=2e-3, atol=2e-3)
 entry = api.get_schedule(a, b_col=8, c_col=8, mesh=mesh, **knobs)
 assert entry.shard.n_shards == 8
+
+# 3) 2-D mesh cells: both layouts x both combines on a real 4x2 partition
+mesh2d = Mesh(np.array(jax.devices()).reshape(4, 2), ("x", "y"))
+want_g = fused_ref.unfused_gemm_spmm(a, b, cg)
+outs = []
+for layout in ("1d", "1.5d"):
+    for combine in ("psum", "reduce_scatter"):
+        got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                                    jnp.asarray(cg, jnp.float32),
+                                    backend="sharded", mesh=mesh2d,
+                                    shard_layout=layout,
+                                    shard_combine=combine, **knobs)
+        np.testing.assert_allclose(np.asarray(got), want_g,
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=f"{layout}/{combine}")
+        outs.append(np.asarray(got))
+for o in outs[1:]:   # all four runs agree to roundoff, not just to the ref
+    np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+e15 = api.get_schedule(a, b_col=8, c_col=8, mesh=mesh2d,
+                       shard_layout="1.5d", **knobs)
+assert e15.shard.n_shards == 4 and e15.shard.n_repl == 2
+assert e15.shard.layout == "1.5d"
+stats = api.schedule_cache_stats()
+assert stats["layout_15d"] >= 1 and stats["layout_1d"] >= 1, stats
 print("FORCED8 OK")
 """
 

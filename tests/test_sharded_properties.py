@@ -1,0 +1,221 @@
+"""Property-based distributed-parity fleet for the sharded dispatch.
+
+Three property families over random sparsity patterns × mesh shapes (1-D
+and 2-D) × combine modes × dtypes, run through the ``tests/_prop.py``
+harness (real hypothesis when installed, the seeded deterministic sweep
+otherwise — either way every environment draws the same cases):
+
+  structure   the row-block tile partition is disjoint + exhaustive, and
+              the reduce-scatter ownership permutation is a bijection of
+              D's rows onto per-shard blocks (each row owned by exactly
+              the shard that writes it).  Pure numpy — runs with
+              *synthetic* shard counts on any host, no devices needed.
+  halo        the schedule's halo index set equals a brute-force
+              recomputation of the wavefront-1 dependency rows straight
+              from the CSR (the ``wf1_dep_rows`` contract re-derived
+              independently).
+  parity      sharded execution over every mesh shape this platform can
+              express (all-device 1-D; 2-D splits when ≥4 devices) ×
+              {psum, reduce_scatter} × {1d, 1.5d, auto} × dtypes equals
+              the single-device ``fused_ref`` oracle.  On a 1-device run
+              this exercises the trivial-mesh fallback; the CI
+              multi-device leg (``--xla_force_host_platform_device_count=8``)
+              runs the real 8-way partitions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _prop import given, settings, st
+from jax.sharding import Mesh
+
+from repro.core.sparse.formats import CSR
+from repro.core.sparse.random import (banded_spd, block_diag_noise,
+                                      hub_powerlaw, powerlaw_graph)
+from repro.core.tilefusion import api, fused_ref, sharded
+
+KNOBS = dict(p=2, cache_size=30_000.0, ct_size=32)
+
+
+def _empty_rows(n: int, seed: int) -> CSR:
+    dense = banded_spd(n, 3, seed=seed).to_dense()
+    dense[::2, :] = 0.0
+    return CSR.from_dense(dense)
+
+
+PATTERNS = {
+    "banded": lambda n, seed: banded_spd(n, 4, seed=seed),
+    "blockdiag": lambda n, seed: block_diag_noise(n, block=16, seed=seed),
+    "powerlaw": lambda n, seed: powerlaw_graph(n, 5, seed=seed),
+    "empty-rows": _empty_rows,
+    "single-hub-row": lambda n, seed: hub_powerlaw(n, 4, seed=seed),
+}
+
+#: Mesh shapes this platform can express: the flattened 1-D mesh always,
+#: 2-D factorizations when the (possibly CI-forced) device count allows.
+MESH_SHAPES = [(len(jax.devices()),)]
+if len(jax.devices()) >= 4:
+    MESH_SHAPES.append((len(jax.devices()) // 2, 2))
+if len(jax.devices()) >= 8:
+    MESH_SHAPES.append((2, 4))
+
+#: Per-dtype tolerances: bf16's 8-bit mantissa accumulates ~0.4% per term
+#: over ~100-term hub rows — loose bounds still catch structural parity
+#: bugs (a dropped halo row or misrouted owner block is an O(1) error).
+_TOL = {"float32": 2e-3, "bfloat16": 1.5e-1}
+
+
+def _mesh(shape) -> Mesh:
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, ("x", "y")[: len(shape)])
+
+
+def _build(pattern: str, n: int, seed: int, n_shards: int, n_repl: int,
+           spmm: bool):
+    a = PATTERNS[pattern](n, seed)
+    entry = api.get_schedule(a, b_col=8, c_col=8, b_is_sparse=spmm, **KNOBS)
+    shard = sharded.build_sharded_schedule(
+        a, entry.sched, entry.dsched, (n_shards, n_repl), b_col=8, c_col=8,
+        b_is_sparse=spmm, width_cap=entry.width_cap,
+        layout="1.5d" if n_repl > 1 else "1d")
+    return a, entry, shard
+
+
+# --------------------------------------------------------------------------
+# Structure: partition disjoint + exhaustive, ownership a bijection
+# --------------------------------------------------------------------------
+@settings(max_examples=14, deadline=None)
+@given(pattern=st.sampled_from(sorted(PATTERNS)), n=st.integers(9, 150),
+       seed=st.integers(0, 5), n_shards=st.integers(2, 9),
+       n_repl=st.integers(1, 3), spmm=st.booleans())
+def test_partition_disjoint_exhaustive(pattern, n, seed, n_shards, n_repl,
+                                       spmm):
+    a, entry, shard = _build(pattern, n, seed, n_shards, n_repl, spmm)
+    assert shard is not None, "uniform schedules must always shard"
+    ds = entry.dsched
+    # --- wf0 tile partition: contiguous, disjoint, exhaustive ---
+    assert shard.tile_bounds.shape == (n_shards + 1,)
+    assert shard.tile_bounds[0] == 0
+    assert shard.tile_bounds[-1] == ds.n_tiles0
+    assert (np.diff(shard.tile_bounds) >= 0).all()
+    assert shard.shard_tile_counts().sum() == ds.n_tiles0
+    # every real tile id appears exactly once in the stacked map
+    real = shard.tile_map[shard.tile_map < ds.n_tiles0]
+    np.testing.assert_array_equal(np.sort(real), np.arange(ds.n_tiles0))
+    # --- output ownership: a bijection of D rows onto per-shard blocks ---
+    perm = shard.out_perm
+    r_per = shard.rows_per_shard
+    assert perm.shape == (ds.n_j,)
+    assert np.unique(perm).size == ds.n_j          # injective => bijection
+    owner = perm // r_per
+    assert ((owner >= 0) & (owner < n_shards)).all()
+    assert (perm % r_per < r_per).all()
+    counts = shard.shard_owned_counts()
+    assert counts.sum() == ds.n_j
+    assert counts.max() == 0 or counts.max() <= r_per
+    # local positions are dense ranks: block s holds counts[s] rows packed
+    # from its base (the reduce-scatter block is gap-free)
+    for s in range(n_shards):
+        block = np.sort(perm[owner == s]) - s * r_per
+        np.testing.assert_array_equal(block, np.arange(counts[s]))
+    # --- stacked out_rows land inside their shard's real block ---
+    for stacked, t_per in ((shard.out_rows0, shard.tiles_per_shard),
+                           (shard.out_rows1, shard.wf1_per_shard)):
+        if not stacked.size or not t_per:
+            continue
+        by_shard = stacked.reshape(n_shards, -1)
+        for s in range(n_shards):
+            loc = by_shard[s][by_shard[s] < r_per]     # r_per = pad slot
+            assert (loc < max(counts[s], 1)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(pattern=st.sampled_from(sorted(PATTERNS)), n=st.integers(9, 150),
+       seed=st.integers(0, 5), n_shards=st.integers(2, 9))
+def test_ownership_matches_write_sets(pattern, n, seed, n_shards):
+    """Each shard's owned rows are exactly the D rows its wf0 + wf1 tiles
+    write — the disjointness the reduce-scatter combine rests on."""
+    a, entry, shard = _build(pattern, n, seed, n_shards, 1, False)
+    ds = entry.dsched
+    owner = shard.out_perm // shard.rows_per_shard
+    # wf0: stacked fused rows of shard s must be owned by s
+    jr0 = shard.j_rows0.reshape(n_shards, -1)
+    jr1 = shard.j_rows1.reshape(n_shards, -1) if shard.wf1_per_shard \
+        else np.full((n_shards, 0), ds.n_j)
+    written = np.full(ds.n_j, -1, dtype=np.int64)
+    for s in range(n_shards):
+        for jr in (jr0[s], jr1[s]):
+            rows = jr[jr < ds.n_j]
+            assert (owner[rows] == s).all()
+            written[rows] = s
+    assert (written >= 0).all(), "every D row written by some shard"
+    # spill lanes are co-located with their target row's owner
+    sp = shard.spill_rows1[shard.spill_rows1 < ds.n_j]
+    if sp.size:
+        sp_shard = np.repeat(np.arange(n_shards),
+                             shard.spill_per_shard)[
+            shard.spill_rows1 < ds.n_j]
+        assert (owner[sp] == sp_shard).all()
+
+
+# --------------------------------------------------------------------------
+# Halo: schedule halo == brute-force wavefront-1 dependency recomputation
+# --------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(pattern=st.sampled_from(sorted(PATTERNS)), n=st.integers(9, 150),
+       seed=st.integers(0, 5), n_shards=st.integers(2, 9),
+       spmm=st.booleans())
+def test_halo_equals_bruteforce_deps(pattern, n, seed, n_shards, spmm):
+    a, entry, shard = _build(pattern, n, seed, n_shards, 1, spmm)
+    deps = []
+    for tl in entry.sched.wavefronts[1]:
+        for j in np.asarray(tl.j_rows):
+            lo, hi = int(a.indptr[j]), int(a.indptr[j + 1])
+            cols = a.indices[lo:hi]
+            vals = a.data[lo:hi]
+            deps.append(cols[vals != 0])
+    want = (np.unique(np.concatenate(deps)).astype(np.int64)
+            if deps and sum(d.size for d in deps)
+            else np.zeros(0, np.int64))
+    np.testing.assert_array_equal(shard.halo_rows, want)
+    # and the send tables cover the halo exactly once
+    pos = shard.send_pos[shard.send_pos < shard.halo_size]
+    np.testing.assert_array_equal(np.sort(pos.reshape(-1)),
+                                  np.arange(shard.halo_size))
+
+
+# --------------------------------------------------------------------------
+# Execution parity: sharded ≡ fused_ref oracle over meshes × modes × dtypes
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("op_pair", ["gemm", "spmm"])
+@settings(max_examples=6, deadline=None)
+@given(pattern=st.sampled_from(sorted(PATTERNS)), seed=st.integers(0, 3),
+       mesh_shape=st.sampled_from(MESH_SHAPES),
+       combine=st.sampled_from(["auto", "psum", "reduce_scatter"]),
+       layout=st.sampled_from(["auto", "1d", "1.5d"]),
+       dtype=st.sampled_from(sorted(_TOL)))
+def test_sharded_parity_vs_oracle(op_pair, pattern, seed, mesh_shape,
+                                  combine, layout, dtype):
+    a = PATTERNS[pattern](64, seed)
+    rng = np.random.default_rng(7000 + 17 * seed)
+    mesh = _mesh(mesh_shape)
+    jdt = jnp.dtype(dtype)
+    tol = _TOL[dtype]
+    kwargs = dict(KNOBS, mesh=mesh, shard_combine=combine,
+                  shard_layout=layout, backend="sharded")
+    if op_pair == "spmm":
+        c = jnp.asarray(rng.standard_normal((64, 8)), jdt)
+        got = api.tile_fused_matmul(a, a, c, **kwargs)
+        want = fused_ref.unfused_spmm_spmm(
+            a, a, np.asarray(c, np.float64))
+    else:
+        b = jnp.asarray(rng.standard_normal((64, 8)), jdt)
+        c = jnp.asarray(rng.standard_normal((8, 8)), jdt)
+        got = api.tile_fused_matmul(a, b, c, **kwargs)
+        want = fused_ref.unfused_gemm_spmm(
+            a, np.asarray(b, np.float64), np.asarray(c, np.float64))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), want, rtol=tol, atol=tol,
+        err_msg=f"{op_pair}/{pattern}/seed{seed}/{mesh_shape}/"
+                f"{combine}/{layout}/{dtype}")
