@@ -1,0 +1,109 @@
+"""Serving-tier benchmark: hit rate and request latency on a drifting
+sampled-subgraph stream, plus the incremental-vs-full inspection micro.
+
+Two headline numbers (both threshold-checked via benchmarks/thresholds.json):
+
+* ``serving/stream/*`` — a request stream where every pattern is distinct
+  or near-distinct (the case that defeats the content-keyed cache, paper
+  §4.2.3's amortization assumption).  Reports per-request latency (p50 as
+  the us column, p99 derived) and the tier hit rate: the fraction of
+  requests served without a full Algorithm-1 inspection.
+* ``serving/incremental/*`` — patching a resident schedule for a ≤5%-dirty
+  pattern vs re-running the full inspector; the speedup is the reason the
+  incremental path exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks import util
+from repro.core.sparse.random import (induced_subgraph, perturb_rows,
+                                      powerlaw_graph)
+from repro.core.tilefusion import api, build_schedule, to_device_schedule
+from repro.core.tilefusion.serving import ServingTier, incremental_update
+from repro.core.tilefusion.schedule import pad_device_schedule
+
+KNOBS = dict(p=8, cache_size=600_000.0, ct_size=256)
+
+
+def _stream_row(n_sub: int, requests: int, jump_p: float, seed: int = 0):
+    """Drive the drifting stream through a fresh tier; one CSV row."""
+    rng = np.random.default_rng(seed)
+    base = powerlaw_graph(8 * n_sub, avg_deg=6, seed=seed)
+    windows = [induced_subgraph(base, s, n_sub)
+               for s in (0, n_sub, 3 * n_sub)]
+    feat = 16
+    tier = ServingTier(b_col=feat, c_col=feat, **KNOBS)
+    b = rng.standard_normal((n_sub, feat))
+    c = rng.standard_normal((feat, feat))
+    current = windows[0]
+    lat = []
+    for i in range(requests):
+        r = rng.random()
+        if r < jump_p and i:
+            current = windows[int(rng.integers(len(windows)))]
+        elif r < jump_p + 0.3:
+            k = max(1, current.n_rows // 50)   # ~2% re-sampled rows
+            current = perturb_rows(
+                current, rng.choice(current.n_rows, k, replace=False),
+                seed=int(rng.integers(1 << 31)))
+        t0 = time.perf_counter()
+        d = tier.matmul(current, b, c)
+        d.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+    lat_us = np.asarray(lat) * 1e6
+    st = tier.stats
+    derived = (f"p99_us={float(np.percentile(lat_us, 99)):.1f};"
+               f"hit_rate={tier.hit_rate():.3f};"
+               f"exact={st['exact_hits']};incremental={st['incremental']};"
+               f"rebuilds={st['rebuilds']};requests={st['requests']}")
+    return (f"serving/stream/n{n_sub}", float(np.median(lat_us)), derived)
+
+
+def _incremental_row(n: int, seed: int = 0):
+    """Patch-vs-full-inspection micro at 5% dirty rows; one CSV row."""
+    rng = np.random.default_rng(seed)
+    a = powerlaw_graph(n, avg_deg=8, seed=seed)
+    entry = api.get_schedule(a, b_col=16, c_col=16, uniform_split=True,
+                             **KNOBS)
+    k = max(1, n // 20)
+    slack = k + 8
+    ds = pad_device_schedule(entry.dsched, j1_slots=slack,
+                             spill_slots=slack * 16)
+    entry = dataclasses.replace(entry, dsched=ds)
+    dirty = np.sort(rng.choice(n, k, replace=False))
+    a_new = perturb_rows(a, dirty, seed=seed + 1)
+    patched = incremental_update(a, entry, a_new, dirty,
+                                 cache_size=KNOBS["cache_size"])
+    assert patched is not None, "incremental path bailed in the micro-bench"
+    incr_us = util.time_fn(
+        lambda: incremental_update(a, entry, a_new, dirty,
+                                   cache_size=KNOBS["cache_size"]))
+
+    def full():
+        sched = build_schedule(a_new, b_col=16, c_col=16,
+                               uniform_split=True, **KNOBS)
+        return to_device_schedule(a_new, sched,
+                                  width_cap=entry.width_cap)
+
+    full_us = util.time_fn(full)
+    derived = (f"full_us={full_us:.1f};speedup={full_us / incr_us:.1f}x;"
+               f"dirty_rows={k}")
+    return (f"serving/incremental/n{n}", incr_us, derived)
+
+
+def run():
+    api.clear_schedule_cache()
+    rows = []
+    if util.smoke():
+        # no window jumps: 1 rebuild in 12 requests keeps hit_rate >= 0.9
+        rows.append(_stream_row(n_sub=192, requests=12, jump_p=0.0))
+        rows.append(_incremental_row(util.bench_n(2048)))
+    else:
+        rows.append(_stream_row(n_sub=2048, requests=96, jump_p=0.04))
+        rows.append(_stream_row(n_sub=1024, requests=48, jump_p=0.04))
+        rows.append(_incremental_row(2048))
+    return rows

@@ -10,15 +10,17 @@ from .scheduler import (Schedule, Tile, balanced_contiguous_partition,
                         build_schedule, fused_compute_ratio)
 from .schedule import DeviceSchedule, to_device_schedule
 from .sharded import ShardedSchedule, build_sharded_schedule, mesh_key
-from . import api, fused_ops, fused_ref, sharded
+from . import api, fused_ops, fused_ref, serving, sharded
 from .api import (clear_schedule_cache, get_schedule, schedule_cache_stats,
                   select_backend, tile_fused_matmul)
+from .serving import ServingTier
 
 __all__ = [
     "Schedule", "Tile", "build_schedule", "fused_compute_ratio",
     "balanced_contiguous_partition",
     "DeviceSchedule", "to_device_schedule", "api", "fused_ops", "fused_ref",
     "ShardedSchedule", "build_sharded_schedule", "mesh_key", "sharded",
+    "ServingTier", "serving",
     "tile_fused_matmul", "get_schedule", "select_backend",
     "clear_schedule_cache", "schedule_cache_stats",
     "tile_cost_bytes", "tile_cost_elements", "tile_costs_batch",

@@ -199,12 +199,20 @@ class ScheduleEntry:
     #: was built for a non-trivial mesh and the grid is uniform; None means
     #: dispatch falls back to single-device execution
     shard: object = None
+    #: content digest of the matrix this entry was inspected (or patched)
+    #: for.  Bucket-keyed entries are looked up by *shape bucket*, not
+    #: content, so the dispatch verifies this against the request before
+    #: trusting a hit; None on autotune sweep entries
+    content_digest: bytes | None = None
+    #: the ``(rows, cols, width_cap)`` shape bucket this entry serves
+    #: (``serving.ServingTier``), None for plain content-keyed entries
+    bucket: tuple | None = None
 
 
 _schedule_cache: "collections.OrderedDict" = collections.OrderedDict()
 _ell_cache: "collections.OrderedDict" = collections.OrderedDict()
 _stats = {"hits": 0, "misses": 0, "evictions": 0, "ell_evictions": 0,
-          "autotune_sweeps": 0}
+          "autotune_sweeps": 0, "incremental_patches": 0}
 _lock = threading.Lock()
 #: The ELL cache has its own lock so its atomic check-and-build (which can
 #: allocate a full-matrix padded ELL) never stalls schedule-cache hits.
@@ -309,7 +317,8 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                  autotune: bool = False,
                  width_cap: int | str | None = "auto",
                  mesh=None, shard_combine: str = "auto",
-                 shard_layout: str = "auto") -> ScheduleEntry:
+                 shard_layout: str = "auto",
+                 bucket: tuple | None = None) -> ScheduleEntry:
     """Run Algorithm 1 once per (content, tile size, cache budget) and
     memoize; subsequent calls with the same key return the cached entry
     without touching the scheduler.
@@ -341,21 +350,43 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     combine; both join the cache key alongside the mesh's (axis names,
     shape): the same matrix on a different mesh shape or layout
     re-inspects.  A trivial (single-device or None) mesh keys and
-    dispatches exactly like no mesh."""
+    dispatches exactly like no mesh.
+
+    ``bucket`` (the serving tier's knob — see ``serving.ServingTier``)
+    replaces the content digest in the cache key with the given shape
+    bucket, so every request padded into the same bucket shares one
+    entry instead of each pattern minting its own.  Because the key no
+    longer pins the content, a hit is only trusted when the entry's
+    ``content_digest`` matches the request (the tier keeps it current via
+    ``store_bucket_schedule``); a mismatch re-inspects and *replaces* the
+    entry under the same key — never a second cache slot, so N patterns
+    in one bucket occupy exactly one entry.  v1 is single-device:
+    ``bucket`` with ``autotune`` or a non-trivial ``mesh`` raises."""
     cap = _resolve_width_cap(a, width_cap)
     mk = sharded.mesh_key(mesh)
     sk = _shard_knobs_key(mk, shard_combine, shard_layout)
+    if bucket is not None:
+        if autotune:
+            raise ValueError("bucket= does not compose with autotune=True "
+                             "(the sweep is per-content; bucket entries "
+                             "are shape-keyed)")
+        if mk is not None:
+            raise ValueError("bucket= is single-device (v1); pass a "
+                             "trivial mesh or none")
     if autotune:
         return _autotune_schedule(a, b_col=b_col, c_col=c_col, p=p,
                                   cache_size=cache_size, ct_size=ct_size,
                                   b_is_sparse=b_is_sparse,
                                   uniform_split=uniform_split,
                                   width_cap=cap, mesh_k=mk, shard_knobs=sk)
-    key = (_content_key(a), b_col, c_col, p, float(cache_size), ct_size,
+    digest = _content_key(a)
+    keybase = ("bucket", tuple(bucket)) if bucket is not None else digest
+    key = (keybase, b_col, c_col, p, float(cache_size), ct_size,
            b_is_sparse, uniform_split, cap, mk, sk)
     with _lock:
         entry = _cache_get(_schedule_cache, key)
-        if entry is not None:
+        if entry is not None and (bucket is None
+                                  or entry.content_digest == digest):
             entry.hits += 1
             _stats["hits"] += 1
             return entry
@@ -379,9 +410,37 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                           c_col=c_col, b_is_sparse=b_is_sparse,
                           inspector_s=time.perf_counter() - t0,
                           traffic_model=tm, width_cap=cap,
-                          mesh_key=mk, shard=shard)
+                          mesh_key=mk, shard=shard,
+                          content_digest=digest,
+                          bucket=None if bucket is None else tuple(bucket))
     with _lock:
         _stats["misses"] += 1
+        _cache_put(_schedule_cache, key, entry)
+    return entry
+
+
+def store_bucket_schedule(entry: ScheduleEntry, *, bucket: tuple,
+                          p: int = 8, cache_size: float = 600_000.0,
+                          ct_size: int = 2048, uniform_split: bool = True,
+                          patched: bool = False) -> ScheduleEntry:
+    """Publish a serving-tier entry (headroom-padded at bucket build, or
+    patched by the incremental inspector) under its bucket cache key,
+    replacing whatever the bucket held.
+
+    The key mirrors ``get_schedule``'s bucket keybase exactly, so the next
+    ``tile_fused_matmul(..., bucket=...)`` dispatch finds this entry;
+    ``entry.content_digest`` must already name the pattern it serves.
+    ``patched=True`` counts the publish as an incremental patch in
+    ``schedule_cache_stats()``."""
+    if entry.content_digest is None:
+        raise ValueError("bucket entries need content_digest set")
+    key = (("bucket", tuple(bucket)), entry.b_col, entry.c_col, p,
+           float(cache_size), ct_size, entry.b_is_sparse, uniform_split,
+           entry.width_cap, None, (None, None))
+    entry.bucket = tuple(bucket)
+    with _lock:
+        if patched:
+            _stats["incremental_patches"] += 1
         _cache_put(_schedule_cache, key, entry)
     return entry
 
@@ -513,10 +572,16 @@ def schedule_cache_stats() -> dict:
     down by the layout the dispatch resolved: ``layout_1d`` (pure row
     shards), ``layout_15d`` (column-replicated 1.5D), ``layout_fallback``
     (mesh-keyed entries whose grid couldn't shard — non-uniform schedules
-    dispatching single-device)."""
+    dispatching single-device).  ``bucket_entries`` counts the live
+    shape-bucket entries of the serving tier — N patterns mapping to K
+    buckets should hold this (and evictions) at K, the LRU-thrash
+    regression the serving tests pin."""
     with _lock, _ell_lock:
         mesh_entries = layout_1d = layout_15d = layout_fallback = 0
+        bucket_entries = 0
         for e in _schedule_cache.values():
+            if e.bucket is not None:
+                bucket_entries += 1
             if e.mesh_key is None:
                 continue
             mesh_entries += 1
@@ -529,6 +594,7 @@ def schedule_cache_stats() -> dict:
         return dict(_stats, entries=len(_schedule_cache),
                     ell_entries=len(_ell_cache),
                     mesh_entries=mesh_entries,
+                    bucket_entries=bucket_entries,
                     layout_1d=layout_1d, layout_15d=layout_15d,
                     layout_fallback=layout_fallback)
 
@@ -679,7 +745,8 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
                       autotune: bool = False,
                       width_cap: int | str | None = "auto",
                       mesh=None, shard_combine: str = "auto",
-                      shard_layout: str = "auto") -> jax.Array:
+                      shard_layout: str = "auto",
+                      bucket: tuple | None = None) -> jax.Array:
     """``D = a @ (b_or_a1 @ c)`` through the tile-fusion schedule.
 
     Args:
@@ -719,6 +786,10 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
         (default) lets ``cost_model.choose_mesh_layout`` weigh halo bytes
         against replication memory.  Both knobs join the schedule cache
         key; on a trivial mesh they are inert.
+      bucket: serving-tier shape bucket — replaces the content digest in
+        the schedule-cache key so same-bucket requests share one entry
+        (see ``get_schedule`` and ``serving.ServingTier``, which owns the
+        padding + bucket choice; pass it through, don't hand-roll it).
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend={backend!r}; expected one of {BACKENDS}")
@@ -747,7 +818,7 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
                          b_is_sparse=b_is_sparse, uniform_split=uniform_split,
                          autotune=autotune, width_cap=width_cap, mesh=mesh,
                          shard_combine=shard_combine,
-                         shard_layout=shard_layout)
+                         shard_layout=shard_layout, bucket=bucket)
     chosen = select_backend(entry) if backend == "auto" else backend
 
     if chosen == "sharded" and entry.shard is None:

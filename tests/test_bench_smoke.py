@@ -34,6 +34,63 @@ def test_benchmark_driver_smoke(mod_name, monkeypatch):
         assert isinstance(derived, str)
 
 
+def test_parse_derived_handles_suffixes_and_text():
+    d = bench_run.parse_derived(
+        "speedup=39.5x;hit_rate=0.948;backend=pallas;empty=;p99_us=12.5")
+    assert d["speedup"] == 39.5          # trailing 'x' stripped
+    assert d["hit_rate"] == 0.948
+    assert d["backend"] == "pallas"      # non-numeric stays a string
+    assert d["p99_us"] == 12.5
+    assert bench_run.parse_derived("") == {}
+
+
+def test_check_thresholds_gates_regressions():
+    rows = [("serving/stream/n192", 100.0,
+             "hit_rate=0.95;rebuilds=2"),
+            ("serving/incremental/n256", 50.0, "speedup=6.0x")]
+    ths = [{"row": "serving/stream/", "key": "hit_rate", "min": 0.9,
+            "smoke": True},
+           {"row": "serving/incremental/", "key": "speedup", "min": 5.0,
+            "smoke": False}]
+    assert bench_run.check_thresholds(rows, ths, smoke=False) == []
+    # a regression trips
+    bad = [("serving/stream/n192", 100.0, "hit_rate=0.5")]
+    v = bench_run.check_thresholds(bad, ths[:1], smoke=False)
+    assert len(v) == 1 and "hit_rate" in v[0]
+    # smoke mode skips non-smoke-safe thresholds entirely
+    assert bench_run.check_thresholds(bad, ths[1:], smoke=True) == []
+    # a threshold whose rows vanished is itself a violation
+    v = bench_run.check_thresholds([], ths[:1], smoke=False)
+    assert v and "no matching rows" in v[0]
+    # a threshold keyed on a missing/non-numeric derived value trips
+    v = bench_run.check_thresholds(
+        [("serving/stream/n192", 1.0, "backend=xla")], ths[:1], smoke=False)
+    assert v and "missing" in v[0]
+
+
+def test_emit_json_roundtrip(tmp_path):
+    import json
+    path = tmp_path / "BENCH_test.json"
+    rows = [("serving/stream/n192", 100.0, "hit_rate=0.95")]
+    bench_run.emit_json(str(path), rows, meta={"smoke": True})
+    doc = json.loads(path.read_text())
+    assert doc["meta"]["smoke"] is True
+    assert doc["rows"][0]["name"] == "serving/stream/n192"
+    assert doc["rows"][0]["us"] == 100.0
+    assert doc["rows"][0]["derived"]["hit_rate"] == 0.95
+    assert doc["rows"][0]["derived_raw"] == "hit_rate=0.95"
+
+
+def test_shipped_thresholds_are_wellformed():
+    import json
+    with open(bench_run.THRESHOLDS_PATH) as f:
+        ths = json.load(f)
+    assert ths, "thresholds.json must gate at least one row"
+    for th in ths:
+        assert set(th) >= {"row", "key"}
+        assert "min" in th or "max" in th
+
+
 def test_smoke_flag_scales_down(monkeypatch):
     from benchmarks import util
     monkeypatch.delenv("REPRO_BENCH_SMOKE", raising=False)

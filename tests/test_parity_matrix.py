@@ -40,8 +40,10 @@ if len(jax.devices()) >= 8:
     SHARDED_CELLS["sharded-4x2"] = (4, 2)
     SHARDED_CELLS["sharded-2x4"] = (2, 4)
 
-#: Explicit override backends plus the numpy schedule-walking oracle.
-BACKENDS = ("pallas", "xla", "unfused", *SHARDED_CELLS, "reference")
+#: Explicit override backends, the serving tier (bucketed + incremental
+#: schedule reuse), and the numpy schedule-walking oracle.
+BACKENDS = ("pallas", "xla", "unfused", *SHARDED_CELLS, "serving",
+            "reference")
 
 
 def _host_mesh(shape=None) -> Mesh:
@@ -92,6 +94,29 @@ def _run_cell(a: CSR, op_pair: str, backend: str, c_col: int,
             got = fused_ref.run_gemm_spmm(a, b, c_ge, entry.sched, check=True)
             want = fused_ref.unfused_gemm_spmm(a, b, c_ge)
         return np.asarray(got), want
+    if backend == "serving":
+        # the tier cell runs twice: once cold (bucketed rebuild) and once
+        # on a perturbed pattern (the incremental-patch path when the
+        # dirty fraction allows), each against its own oracle
+        from repro.core.sparse.random import perturb_rows
+        from repro.core.tilefusion.serving import ServingTier
+        a2 = perturb_rows(a, rng.choice(a.n_rows, 1, replace=False),
+                          seed=int(rng.integers(1 << 31)))
+        if op_pair == "spmm":
+            tier = ServingTier(b_col=c_col, c_col=c_col, b_is_sparse=True,
+                               **KNOBS)
+            pairs = [(tier.matmul(a, a, c_sp),
+                      fused_ref.unfused_spmm_spmm(a, a, c_sp)),
+                     (tier.matmul(a2, a2, c_sp),
+                      fused_ref.unfused_spmm_spmm(a2, a2, c_sp))]
+        else:
+            tier = ServingTier(b_col=8, c_col=c_col, **KNOBS)
+            pairs = [(tier.matmul(a, b, c_ge),
+                      fused_ref.unfused_gemm_spmm(a, b, c_ge)),
+                     (tier.matmul(a2, b, c_ge),
+                      fused_ref.unfused_gemm_spmm(a2, b, c_ge))]
+        return (np.concatenate([np.asarray(g) for g, _ in pairs]),
+                np.concatenate([w for _, w in pairs]))
     kwargs = dict(KNOBS)
     if backend in SHARDED_CELLS:
         kwargs["mesh"] = _host_mesh(SHARDED_CELLS[backend])

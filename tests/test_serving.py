@@ -1,0 +1,315 @@
+"""Serving-tier suite: bucketed reuse, incremental inspection, batching.
+
+Pins the ISSUE-7 contract: (a) every tier path — cold rebuild, exact
+digest hit, incremental patch — is parity-correct against the unfused
+numpy oracle AND the ``fused_ref`` schedule walk (``check=True`` re-runs
+the wavefront invariants on the patched schedule); (b) N distinct
+patterns in K buckets occupy K cache entries with zero evictions — the
+no-thrash property the content-keyed cache cannot provide; (c) the
+hits/misses/incremental_patches/bucket_entries counters stay truthful
+through ``clear_schedule_cache``; (d) the batching front end returns
+exactly the per-request results.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparse.formats import CSR, csr_content_digest
+from repro.core.sparse.random import (induced_subgraph, perturb_rows,
+                                      powerlaw_graph)
+from repro.core.tilefusion import api, fused_ref
+from repro.core.tilefusion.cost_model import serving_bucket_price
+from repro.core.tilefusion.schedule import pad_device_schedule
+from repro.core.tilefusion.scheduler import row_extents_for
+from repro.core.tilefusion.serving import (ServingTier, csr_dirty_rows,
+                                           incremental_update, pad_csr)
+from repro.launch.serve import SubgraphFrontEnd
+
+KNOBS = dict(p=2, cache_size=30_000.0, ct_size=32)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    api.clear_schedule_cache()
+    yield
+    api.clear_schedule_cache()
+
+
+def _graph(n=200, seed=3, avg_deg=6):
+    base = powerlaw_graph(8 * n, avg_deg=avg_deg, seed=seed)
+    return induced_subgraph(base, n, n)
+
+
+# --------------------------------------------------------------------------
+# helpers: pad_csr / csr_dirty_rows / row_extents_for / bucket pricing
+# --------------------------------------------------------------------------
+def test_pad_csr_is_numerical_noop():
+    a = _graph(100)
+    ap = pad_csr(a, 128, 128)
+    assert (ap.n_rows, ap.n_cols) == (128, 128)
+    assert ap.nnz == a.nnz
+    want = np.zeros((128, 128))
+    want[:100, :100] = a.to_dense()
+    np.testing.assert_array_equal(ap.to_dense(), want)
+    assert pad_csr(a, a.n_rows, a.n_cols) is a
+    with pytest.raises(ValueError):
+        pad_csr(a, 50, 128)
+
+
+def test_csr_dirty_rows_finds_exact_delta():
+    a = _graph(150)
+    rng = np.random.default_rng(0)
+    rows = np.sort(rng.choice(a.n_rows, 7, replace=False))
+    a2 = perturb_rows(a, rows, seed=1)
+    got = csr_dirty_rows(a, a2)
+    # perturb_rows re-samples those rows; a re-sample may coincide with
+    # the original, so dirty is a subset of the perturbed rows
+    assert set(got) <= set(rows)
+    assert csr_dirty_rows(a, a).size == 0
+    assert csr_dirty_rows(a, pad_csr(a, 256, 256)) is None
+    # value-only change (same sparsity pattern) must be caught too
+    a3 = CSR(a.n_rows, a.n_cols, a.indptr, a.indices, a.data.copy())
+    a3.data[a.indptr[5]] += 1.0
+    np.testing.assert_array_equal(csr_dirty_rows(a, a3), [5])
+
+
+def test_row_extents_for_matches_full_extents():
+    a = _graph(120)
+    rows = np.array([0, 3, 57, 119])
+    rmin, rmax = row_extents_for(a, rows)
+    dense = a.to_dense()
+    for k, r in enumerate(rows):
+        nz = np.nonzero(dense[r])[0]
+        if nz.size:
+            assert (rmin[k], rmax[k]) == (nz.min(), nz.max())
+        else:
+            assert (rmin[k], rmax[k]) == (a.n_cols, -1)
+
+
+def test_serving_bucket_price_tradeoff():
+    # tiny pad, expensive inspection -> bucket; huge pad, one-shot -> not
+    cheap = serving_bucket_price(n_rows=1000, n_pad=1024, nnz=8000,
+                                 b_col=32, c_col=32, expected_reuse=8.0)
+    assert cheap["bucketed"]
+    dear = serving_bucket_price(n_rows=10, n_pad=1024, nnz=40,
+                                b_col=32, c_col=32, expected_reuse=1.0)
+    assert not dear["bucketed"]
+    assert dear["break_even_reuse"] < 1.0
+    # more reuse always amortizes more inspection per call
+    r2 = serving_bucket_price(n_rows=10, n_pad=1024, nnz=40,
+                              b_col=32, c_col=32, expected_reuse=100.0)
+    assert r2["inspect_elements_per_call"] < dear["inspect_elements_per_call"]
+
+
+def test_pad_device_schedule_noop_and_shapes():
+    a = _graph(100)
+    entry = api.get_schedule(a, b_col=8, c_col=8, uniform_split=True,
+                             **KNOBS)
+    ds = entry.dsched
+    assert pad_device_schedule(ds) is ds
+    ds2 = pad_device_schedule(ds, j1_slots=10, spill_slots=40)
+    assert ds2.j_rows1.size >= ds.j_rows1.size + 10
+    assert ds2.spill_rows1.size == ds.spill_rows1.size + 40
+    # padding is a numerical no-op
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal((a.n_cols, 8)).astype(np.float32)
+    c = rng.standard_normal((8, 8)).astype(np.float32)
+    from repro.core.tilefusion import fused_ops
+    got = fused_ops.fused_gemm_spmm(ds2, jnp.asarray(b), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(got),
+                               fused_ref.unfused_gemm_spmm(a, b, c),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# incremental inspection
+# --------------------------------------------------------------------------
+def _padded_entry(a, *, b_is_sparse=False, slack=16):
+    import dataclasses
+    entry = api.get_schedule(a, b_col=8, c_col=8, b_is_sparse=b_is_sparse,
+                             uniform_split=True, **KNOBS)
+    ds = pad_device_schedule(entry.dsched, j1_slots=slack,
+                             spill_slots=slack * 8)
+    return dataclasses.replace(entry, dsched=ds)
+
+
+@pytest.mark.parametrize("op_pair", ["gemm", "spmm"])
+def test_incremental_update_parity(op_pair):
+    a = _graph(160)
+    entry = _padded_entry(a, b_is_sparse=(op_pair == "spmm"))
+    rng = np.random.default_rng(2)
+    dirty = np.sort(rng.choice(a.n_rows, 6, replace=False))
+    a2 = perturb_rows(a, dirty, seed=5)
+    patched = incremental_update(a, entry, a2, dirty,
+                                 cache_size=KNOBS["cache_size"])
+    assert patched is not None
+    patched.sched.validate()
+    assert patched.content_digest == csr_content_digest(a2)
+    # the patched HOST schedule passes the fused_ref wavefront-invariant
+    # walk (check=True) and both it and the patched DEVICE schedule agree
+    # with the oracle on the new pattern
+    if op_pair == "spmm":
+        c = rng.standard_normal((a2.n_cols, 8))
+        ref = fused_ref.run_spmm_spmm(a2, a2, c, patched.sched, check=True)
+        want = fused_ref.unfused_spmm_spmm(a2, a2, c)
+        from repro.core.tilefusion import fused_ops
+        got = fused_ops.fused_spmm_spmm(patched.dsched, a2,
+                                        jnp.asarray(c, jnp.float32))
+    else:
+        b = rng.standard_normal((a2.n_cols, 8))
+        c = rng.standard_normal((8, 8))
+        ref = fused_ref.run_gemm_spmm(a2, b, c, patched.sched, check=True)
+        want = fused_ref.unfused_gemm_spmm(a2, b, c)
+        from repro.core.tilefusion import fused_ops
+        got = fused_ops.fused_gemm_spmm(patched.dsched,
+                                        jnp.asarray(b, jnp.float32),
+                                        jnp.asarray(c, jnp.float32))
+    np.testing.assert_allclose(ref, want, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_incremental_update_noop_and_bails():
+    a = _graph(160)
+    entry = _padded_entry(a)
+    # empty dirty set -> the entry itself
+    assert incremental_update(a, entry, a, np.array([], np.int64),
+                              cache_size=KNOBS["cache_size"]) is entry
+    # headroom exhausted -> None (every row dirty, way past the slack)
+    all_rows = np.arange(a.n_rows)
+    a2 = perturb_rows(a, all_rows, seed=1)
+    assert incremental_update(a, entry, a2, all_rows,
+                              cache_size=KNOBS["cache_size"]) is None
+    # shape mismatch -> None
+    assert incremental_update(a, entry, pad_csr(a, 256, 256),
+                              np.array([0]),
+                              cache_size=KNOBS["cache_size"]) is None
+
+
+def test_incremental_update_moves_rows_between_wavefronts():
+    # a perturbed row's new neighbors usually leave its tile -> fused row
+    # must migrate wf0 -> wf1; parity above proves values, this pins the
+    # structural move actually happened at least once
+    a = _graph(160)
+    entry = _padded_entry(a)
+    fused_before = {int(j) for tl in entry.sched.wavefronts[0]
+                    for j in tl.j_rows}
+    rng = np.random.default_rng(3)
+    cand = np.array(sorted(fused_before))
+    assert cand.size, "seed graph has no fused rows; pick another seed"
+    dirty = np.sort(rng.choice(cand, min(4, cand.size), replace=False))
+    a2 = perturb_rows(a, dirty, seed=11)
+    real_dirty = csr_dirty_rows(a, a2)
+    patched = incremental_update(a, entry, a2, real_dirty,
+                                 cache_size=KNOBS["cache_size"])
+    assert patched is not None
+    fused_after = {int(j) for tl in patched.sched.wavefronts[0]
+                   for j in tl.j_rows}
+    moved = fused_before - fused_after
+    assert moved <= set(int(x) for x in real_dirty)
+    assert moved, "no dirty fused row left wf0 (perturbation too tame)"
+
+
+# --------------------------------------------------------------------------
+# the tier: bucket no-thrash, counters, end-to-end parity
+# --------------------------------------------------------------------------
+def test_bucket_lru_never_thrashes():
+    # satellite 4: N distinct patterns, K << N buckets -> exactly K cache
+    # entries and zero evictions (the content-keyed cache would hold N)
+    # fixed width cap so the bucket key varies only in shape ("auto" would
+    # also split by the per-pattern quantized cap — still bounded, but the
+    # count here would depend on degree distributions)
+    tier = ServingTier(b_col=8, c_col=8, width_cap=8, **KNOBS)
+    rng = np.random.default_rng(0)
+    base = powerlaw_graph(2048, avg_deg=5, seed=9)
+    sizes = (100, 200, 400)            # -> 3 pow2 buckets (128/256/512)
+    for i in range(12):
+        n = sizes[i % len(sizes)]
+        a = induced_subgraph(base, (i * 37) % 1024, n)
+        b = rng.standard_normal((a.n_cols, 8))
+        c = rng.standard_normal((8, 8))
+        d = np.asarray(tier.matmul(a, b, c))
+        np.testing.assert_allclose(d, fused_ref.unfused_gemm_spmm(a, b, c),
+                                   rtol=2e-3, atol=2e-3)
+    st = api.schedule_cache_stats()
+    assert len(tier._residents) == len(sizes)
+    assert st["bucket_entries"] == len(sizes)
+    assert st["entries"] == len(sizes)
+    assert st["evictions"] == 0
+    assert tier.stats["requests"] == 12
+
+
+def test_stats_counters_and_clear():
+    tier = ServingTier(b_col=8, c_col=8, **KNOBS)
+    rng = np.random.default_rng(1)
+    a = _graph(150)
+    b = rng.standard_normal((a.n_cols, 8))
+    c = rng.standard_normal((8, 8))
+    tier.matmul(a, b, c)               # rebuild (miss)
+    tier.matmul(a, b, c)               # exact hit
+    a2 = perturb_rows(a, np.array([3, 9]), seed=2)
+    tier.matmul(a2, b, c)              # incremental patch
+    st = api.schedule_cache_stats()
+    assert st["misses"] >= 1
+    assert st["hits"] >= 2
+    assert st["incremental_patches"] == 1
+    assert st["bucket_entries"] == 1
+    assert tier.stats == {"requests": 3, "exact_hits": 1,
+                          "incremental": 1, "rebuilds": 1}
+    assert tier.hit_rate() == pytest.approx(2 / 3)
+    api.clear_schedule_cache()
+    st = api.schedule_cache_stats()
+    assert st["hits"] == st["misses"] == st["incremental_patches"] == 0
+    assert st["bucket_entries"] == st["entries"] == 0
+
+
+def test_tier_stream_parity_and_hit_rate():
+    # a drifting stream stays correct on every path and mostly avoids the
+    # inspector — the bench headline, pinned at test scale
+    tier = ServingTier(b_col=8, c_col=8, **KNOBS)
+    rng = np.random.default_rng(4)
+    current = _graph(180)
+    b = rng.standard_normal((current.n_cols, 8))
+    c = rng.standard_normal((8, 8))
+    for i in range(15):
+        if 0 < i and i % 5 == 0:
+            k = max(1, current.n_rows // 40)
+            current = perturb_rows(
+                current, rng.choice(current.n_rows, k, replace=False),
+                seed=i)
+        d = np.asarray(tier.matmul(current, b, c))
+        np.testing.assert_allclose(
+            d, fused_ref.unfused_gemm_spmm(current, b, c),
+            rtol=2e-3, atol=2e-3, err_msg=f"request {i}")
+    assert tier.stats["rebuilds"] == 1
+    assert tier.stats["incremental"] >= 1
+    assert tier.hit_rate() >= 0.9
+
+
+def test_front_end_batched_matches_per_request():
+    fe = SubgraphFrontEnd(feat_dim=4, out_dim=3, max_batch=3, **KNOBS)
+    rng = np.random.default_rng(5)
+    a = _graph(96)
+    a2 = perturb_rows(a, np.array([1, 2]), seed=6)
+    reqs = []
+    for pat in (a, a, a2, a, a2):       # two patterns, interleaved
+        feats = rng.standard_normal((pat.n_cols, 4))
+        w = rng.standard_normal((4, 3))
+        reqs.append((pat, feats, w))
+        fe.submit(pat, feats, w)
+    outs = fe.flush()
+    assert len(outs) == len(reqs)
+    for got, (pat, feats, w) in zip(outs, reqs):
+        want = fused_ref.unfused_gemm_spmm(pat, feats, w)
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=2e-3, atol=2e-3)
+    # 5 requests, max_batch 3, two pattern groups -> fewer dispatches
+    # than requests, and every logical request counted in tier stats
+    assert fe.batches < len(reqs)
+    assert fe.tier.stats["requests"] == len(reqs)
+
+
+def test_bucket_knob_rejects_bad_compositions():
+    a = _graph(100)
+    with pytest.raises(ValueError):
+        api.get_schedule(a, b_col=8, c_col=8, bucket=(128, 128, None),
+                         autotune=True, **KNOBS)
