@@ -29,6 +29,7 @@ MODULES = [
     "kernels_bench",
     "sharded_scaling",
     "serving_bench",
+    "train_bench",
 ]
 
 THRESHOLDS_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),

@@ -81,6 +81,25 @@ class CSR:
             data=np.concatenate(data) if data else np.zeros(0, np.float64),
         )
 
+    def transpose(self) -> "CSR":
+        """``Aᵀ`` via the COO round-trip, memoized per instance (CSR is
+        treated as immutable) with the back-pointer set so ``Aᵀᵀ is A``.
+
+        This is what the differentiable fused path runs its backward
+        against (the ``mm(sparse.t(), grad)`` structure of sparse autograd
+        rules): the transpose is materialized once per matrix and every
+        transpose-schedule inspection and ELL pack hangs off this one
+        cached instance."""
+        t = getattr(self, "_transpose", None)
+        if t is None:
+            rows = np.repeat(np.arange(self.n_rows, dtype=np.int32),
+                             np.diff(self.indptr))
+            t = CSR.from_coo(self.n_cols, self.n_rows,
+                             self.indices.astype(np.int32), rows, self.data)
+            object.__setattr__(self, "_transpose", t)
+            object.__setattr__(t, "_transpose", self)
+        return t
+
     @staticmethod
     def from_coo(n_rows: int, n_cols: int, rows: np.ndarray, cols: np.ndarray,
                  vals: np.ndarray) -> "CSR":

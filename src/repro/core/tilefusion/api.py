@@ -94,7 +94,8 @@ from .scheduler import Schedule, build_schedule
 
 def _shard_for_mesh(a: CSR, sched, dsched, mk: tuple, *, b_col: int,
                     c_col: int, b_is_sparse: bool, width_cap,
-                    shard_combine: str, shard_layout: str):
+                    shard_combine: str, shard_layout: str,
+                    dtype_bytes: int = 4):
     """Mesh-shape-aware shard build: resolve how the mesh's axes are used
     (pure-1D row shards vs 1.5D row × column-replica) and which output
     combine runs, then build the per-shard schedule.
@@ -106,15 +107,17 @@ def _shard_for_mesh(a: CSR, sched, dsched, mk: tuple, *, b_col: int,
     shape = mk[1]
     layout = shard_layout
     if layout == "auto":
-        operand_bytes = float(a.nnz * 2 + dsched.n_i * b_col) * 4
+        operand_bytes = (
+            float(a.nnz) * (dtype_bytes + cost_model.INDEX_BYTES)
+            + float(dsched.n_i * b_col) * dtype_bytes)
         layout = cost_model.choose_mesh_layout(
             shape, halo_rows=int(dsched.wf1_dep_rows().shape[0]),
             n_i=dsched.n_i, n_j=dsched.n_j, c_col=c_col,
-            operand_bytes=operand_bytes)["layout"]
+            operand_bytes=operand_bytes, dtype_bytes=dtype_bytes)["layout"]
     return sharded.build_sharded_schedule(
         a, sched, dsched, shape, b_col=b_col, c_col=c_col,
         b_is_sparse=b_is_sparse, width_cap=width_cap, layout=layout,
-        combine=shard_combine)
+        combine=shard_combine, dtype_bytes=dtype_bytes)
 
 
 def _shard_knobs_key(mk: tuple | None, shard_combine: str,
@@ -143,6 +146,15 @@ BACKENDS = ("auto", "pallas", "xla", "unfused", "sharded")
 #: executor's padding/scatter overhead cannot pay for itself — dispatch to
 #: the unfused baseline instead.
 MIN_FUSED_RATIO = 0.02
+
+#: Minimum modeled Eq-3 traffic saving the tiled executors must clear.  The
+#: byte model prices data movement only; the tile loop's fixed costs (per-
+#: tile gathers, wavefront barrier, D1 scatter) are off-model, so a saving
+#: in the low single digits reliably loses to the plain hybrid SpMM in wall
+#: clock (measured on hub-heavy power-law graphs, where ~5% modeled saving
+#: ran ~30% slower fused).  Friendly patterns (banded, block-diagonal)
+#: model 25%+ and clear this floor easily.
+MIN_TRAFFIC_SAVING = 0.10
 
 #: The paper's ct_size heuristic (§4: ratio gains saturate past 2048); the
 #: autotune sweep is anchored on it — the winner never predicts more Eq-3
@@ -207,6 +219,13 @@ class ScheduleEntry:
     #: the ``(rows, cols, width_cap)`` shape bucket this entry serves
     #: (``serving.ServingTier``), None for plain content-keyed entries
     bucket: tuple | None = None
+    #: True when this entry was inspected on ``a.transpose()`` — the
+    #: backward-pass schedule of the custom_vjp, keyed by the *forward*
+    #: digest plus this bit so fwd and bwd entries live side by side
+    transpose: bool = False
+    #: itemsize of the dense operand the entry prices traffic for; part of
+    #: the cache key (bf16 and f32 move different bytes through Eq 3)
+    dtype_bytes: int = 4
 
 
 _schedule_cache: "collections.OrderedDict" = collections.OrderedDict()
@@ -297,9 +316,11 @@ def _packed_ell_bytes(a: CSR, dsched: DeviceSchedule, b_is_sparse: bool,
     elements per spill lane, and — for SpMM-SpMM — the op-1 hybrid at the
     schedule's cap (op-1 ≈ A, the cost model's standing caveat).  This is
     the term the width cap actually moves (Eq-3 traffic is cap-invariant),
-    so the autotune sweep scores with it."""
-    n = (int(dsched.ell_cols1.size) * 2
-         + cost_model.SPILL_ELEMENTS * int(dsched.spill_rows1.size))
+    so the autotune sweep scores with it.  Value slots are priced at the
+    operand itemsize, column-index slots always at ``INDEX_BYTES``."""
+    vals = float(dsched.ell_cols1.size + dsched.spill_rows1.size)
+    idx = float(dsched.ell_cols1.size
+                + (cost_model.SPILL_ELEMENTS - 1) * dsched.spill_rows1.size)
     if b_is_sparse:
         # one arithmetic, owned by cost_model (a.n_cols = no-cap sentinel:
         # no row can be wider, so the clamp resolves it to pad-to-max)
@@ -307,8 +328,9 @@ def _packed_ell_bytes(a: CSR, dsched: DeviceSchedule, b_is_sparse: bool,
             a, dsched.width_cap if dsched.width_cap is not None
             else max(a.n_cols, 1))
         spill = int(cost_model._spill_cumsum(a, w)[-1])
-        n += a.n_rows * w * 2 + cost_model.SPILL_ELEMENTS * spill
-    return float(n * dtype_bytes)
+        vals += float(a.n_rows * w + spill)
+        idx += float(a.n_rows * w + (cost_model.SPILL_ELEMENTS - 1) * spill)
+    return vals * dtype_bytes + idx * cost_model.INDEX_BYTES
 
 
 def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
@@ -318,7 +340,9 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                  width_cap: int | str | None = "auto",
                  mesh=None, shard_combine: str = "auto",
                  shard_layout: str = "auto",
-                 bucket: tuple | None = None) -> ScheduleEntry:
+                 bucket: tuple | None = None,
+                 transpose: bool = False,
+                 dtype_bytes: int = 4) -> ScheduleEntry:
     """Run Algorithm 1 once per (content, tile size, cache budget) and
     memoize; subsequent calls with the same key return the cached entry
     without touching the scheduler.
@@ -361,10 +385,24 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     ``store_bucket_schedule``); a mismatch re-inspects and *replaces* the
     entry under the same key — never a second cache slot, so N patterns
     in one bucket occupy exactly one entry.  v1 is single-device:
-    ``bucket`` with ``autotune`` or a non-trivial ``mesh`` raises."""
-    cap = _resolve_width_cap(a, width_cap)
+    ``bucket`` with ``autotune`` or a non-trivial ``mesh`` raises.
+
+    ``transpose=True`` inspects ``a.transpose()`` instead — the backward
+    pass's schedule.  The key stays on the *forward* matrix's digest plus
+    the transpose bit, so the fwd/bwd pair of one training step shares one
+    digest computation and shows up side by side in the cache
+    (``schedule_cache_stats()["transpose_entries"]``).  ``b_col`` /
+    ``c_col`` are the dimensions of the transposed product — the caller
+    passes them already swapped.
+
+    ``dtype_bytes`` is the dense operand's itemsize; it scales the Eq-3
+    value traffic (index traffic stays at 4 bytes) and joins the cache key
+    so bf16 and f32 runs of one pattern price — and autotune — separately."""
+    a_eff = a.transpose() if transpose else a
+    cap = _resolve_width_cap(a_eff, width_cap)
     mk = sharded.mesh_key(mesh)
     sk = _shard_knobs_key(mk, shard_combine, shard_layout)
+    dtype_bytes = int(dtype_bytes)
     if bucket is not None:
         if autotune:
             raise ValueError("bucket= does not compose with autotune=True "
@@ -373,16 +411,21 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
         if mk is not None:
             raise ValueError("bucket= is single-device (v1); pass a "
                              "trivial mesh or none")
+        if transpose:
+            raise ValueError("bucket= is a serving (inference) knob; it "
+                             "does not compose with transpose=True")
     if autotune:
         return _autotune_schedule(a, b_col=b_col, c_col=c_col, p=p,
                                   cache_size=cache_size, ct_size=ct_size,
                                   b_is_sparse=b_is_sparse,
                                   uniform_split=uniform_split,
-                                  width_cap=cap, mesh_k=mk, shard_knobs=sk)
+                                  width_cap=cap, mesh_k=mk, shard_knobs=sk,
+                                  transpose=transpose,
+                                  dtype_bytes=dtype_bytes)
     digest = _content_key(a)
     keybase = ("bucket", tuple(bucket)) if bucket is not None else digest
     key = (keybase, b_col, c_col, p, float(cache_size), ct_size,
-           b_is_sparse, uniform_split, cap, mk, sk)
+           b_is_sparse, uniform_split, cap, mk, sk, transpose, dtype_bytes)
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None and (bucket is None
@@ -391,19 +434,20 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
             _stats["hits"] += 1
             return entry
     t0 = time.perf_counter()
-    sched = build_schedule(a, b_col=b_col, c_col=c_col, p=p,
+    sched = build_schedule(a_eff, b_col=b_col, c_col=c_col, p=p,
                            cache_size=cache_size, ct_size=ct_size,
                            b_is_sparse=b_is_sparse,
                            uniform_split=uniform_split, width_cap=cap)
-    dsched = to_device_schedule(a, sched, width_cap=cap)
-    tm = dsched.hbm_traffic_model(b_col, c_col)
-    tm["packed_ell_bytes"] = _packed_ell_bytes(a, dsched, b_is_sparse)
+    dsched = to_device_schedule(a_eff, sched, width_cap=cap)
+    tm = dsched.hbm_traffic_model(b_col, c_col, dtype_bytes=dtype_bytes)
+    tm["packed_ell_bytes"] = _packed_ell_bytes(a_eff, dsched, b_is_sparse,
+                                               dtype_bytes)
     shard = None
     if mk is not None:
-        shard = _shard_for_mesh(a, sched, dsched, mk, b_col=b_col,
+        shard = _shard_for_mesh(a_eff, sched, dsched, mk, b_col=b_col,
                                 c_col=c_col, b_is_sparse=b_is_sparse,
                                 width_cap=cap, shard_combine=sk[0],
-                                shard_layout=sk[1])
+                                shard_layout=sk[1], dtype_bytes=dtype_bytes)
         if shard is not None:
             tm["sharded"] = shard.comm_model
     entry = ScheduleEntry(sched=sched, dsched=dsched, b_col=b_col,
@@ -412,7 +456,8 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                           traffic_model=tm, width_cap=cap,
                           mesh_key=mk, shard=shard,
                           content_digest=digest,
-                          bucket=None if bucket is None else tuple(bucket))
+                          bucket=None if bucket is None else tuple(bucket),
+                          transpose=transpose, dtype_bytes=dtype_bytes)
     with _lock:
         _stats["misses"] += 1
         _cache_put(_schedule_cache, key, entry)
@@ -422,7 +467,8 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
 def store_bucket_schedule(entry: ScheduleEntry, *, bucket: tuple,
                           p: int = 8, cache_size: float = 600_000.0,
                           ct_size: int = 2048, uniform_split: bool = True,
-                          patched: bool = False) -> ScheduleEntry:
+                          patched: bool = False,
+                          dtype_bytes: int = 4) -> ScheduleEntry:
     """Publish a serving-tier entry (headroom-padded at bucket build, or
     patched by the incremental inspector) under its bucket cache key,
     replacing whatever the bucket held.
@@ -436,7 +482,7 @@ def store_bucket_schedule(entry: ScheduleEntry, *, bucket: tuple,
         raise ValueError("bucket entries need content_digest set")
     key = (("bucket", tuple(bucket)), entry.b_col, entry.c_col, p,
            float(cache_size), ct_size, entry.b_is_sparse, uniform_split,
-           entry.width_cap, None, (None, None))
+           entry.width_cap, None, (None, None), False, int(dtype_bytes))
     entry.bucket = tuple(bucket)
     with _lock:
         if patched:
@@ -449,7 +495,9 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
                        cache_size: float, ct_size: int, b_is_sparse: bool,
                        uniform_split: bool, width_cap: int | None,
                        mesh_k: tuple | None = None,
-                       shard_knobs: tuple = (None, None)) -> ScheduleEntry:
+                       shard_knobs: tuple = (None, None),
+                       transpose: bool = False,
+                       dtype_bytes: int = 4) -> ScheduleEntry:
     """Eq-3 tile-size × width-cap sweep, memoized under its own entry.
 
     Candidates: (AUTOTUNE_CT_GRID ∪ {ct_size, 2048}) × AUTOTUNE_CACHE_SCALES
@@ -463,7 +511,7 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
     """
     key = ("autotune", _content_key(a), b_col, c_col, p, float(cache_size),
            ct_size, b_is_sparse, uniform_split, width_cap, mesh_k,
-           shard_knobs)
+           shard_knobs, transpose, int(dtype_bytes))
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None:
@@ -472,17 +520,18 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
             return entry
 
     t0 = time.perf_counter()
+    a_eff = a.transpose() if transpose else a
     cts = sorted(set(AUTOTUNE_CT_GRID) | {ct_size, DEFAULT_CT_SIZE})
     if width_cap is None:
         # pad-to-max resolves to the max-degree cap so keys stay concrete
-        counts = np.diff(a.indptr)
+        counts = np.diff(a_eff.indptr)
         anchor_cap = max(int(counts.max()), 1) if counts.size else 1
     else:
         anchor_cap = width_cap
     # the cap only reaches Algorithm 1 through the sparse-op-1 Eq-3 charge;
     # for dense B every cap yields the identical host schedule, so sweeping
     # caps there would just re-run the same inspection — keep the caller's
-    caps = _candidate_width_caps(a, width_cap) if b_is_sparse \
+    caps = _candidate_width_caps(a_eff, width_cap) if b_is_sparse \
         else [anchor_cap]
     candidates: dict = {}
     for ct in cts:
@@ -492,7 +541,8 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
                                     cache_size=cache_size * scale,
                                     ct_size=ct, b_is_sparse=b_is_sparse,
                                     uniform_split=uniform_split,
-                                    width_cap=cap)
+                                    width_cap=cap, transpose=transpose,
+                                    dtype_bytes=dtype_bytes)
                 candidates[(ct, cache_size * scale, cap)] = cand
 
     def traffic(e: ScheduleEntry) -> float:
@@ -515,12 +565,13 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
     if mesh_k is not None:
         # the sweep's candidates are mesh-free; shard the winner (a fresh
         # traffic_model dict so the single-device candidate stays untouched)
-        shard = _shard_for_mesh(a, best.sched, best.dsched, mesh_k,
+        shard = _shard_for_mesh(a_eff, best.sched, best.dsched, mesh_k,
                                 b_col=b_col, c_col=c_col,
                                 b_is_sparse=b_is_sparse,
                                 width_cap=best.width_cap,
                                 shard_combine=shard_knobs[0],
-                                shard_layout=shard_knobs[1])
+                                shard_layout=shard_knobs[1],
+                                dtype_bytes=dtype_bytes)
         tm = dict(best.traffic_model)
         if shard is not None:
             tm["sharded"] = shard.comm_model
@@ -547,12 +598,20 @@ def _csr_ell(a: CSR, width_cap: int | None = None) -> Tuple[jax.Array, ...]:
     Check-and-insert happens under a single ``_ell_lock`` acquisition: the
     previous read-then-write pattern let two threads race past the miss
     check and both build (and publish) the ELL arrays.  The dedicated lock
-    means a large build never blocks schedule-cache hits."""
+    means a large build never blocks schedule-cache hits.
+
+    The build runs under ``jax.ensure_compile_time_eval()``: a miss can
+    happen inside a trace (the custom_vjp backward builds the Aᵀ ELL while
+    ``jax.grad`` traces), and ``jnp.asarray`` under an active trace yields
+    a *tracer* — caching that would poison every later trace with a leaked
+    value.  The guard forces concrete arrays no matter where the miss
+    lands."""
     key = (_content_key(a), width_cap)
     with _ell_lock:
         ell = _cache_get(_ell_cache, key)
         if ell is None:
-            ell = fused_ops.csr_to_ell(a, width_cap=width_cap)
+            with jax.ensure_compile_time_eval():
+                ell = fused_ops.csr_to_ell(a, width_cap=width_cap)
             _cache_put(_ell_cache, key, ell, evict_key="ell_evictions")
     return ell
 
@@ -575,13 +634,18 @@ def schedule_cache_stats() -> dict:
     dispatching single-device).  ``bucket_entries`` counts the live
     shape-bucket entries of the serving tier — N patterns mapping to K
     buckets should hold this (and evictions) at K, the LRU-thrash
-    regression the serving tests pin."""
+    regression the serving tests pin.  ``transpose_entries`` counts the
+    live backward-pass (``transpose=True``) schedules the custom_vjp
+    training path inspected — one per (graph, shape) when the transpose
+    cache amortizes correctly."""
     with _lock, _ell_lock:
         mesh_entries = layout_1d = layout_15d = layout_fallback = 0
-        bucket_entries = 0
+        bucket_entries = transpose_entries = 0
         for e in _schedule_cache.values():
             if e.bucket is not None:
                 bucket_entries += 1
+            if e.transpose:
+                transpose_entries += 1
             if e.mesh_key is None:
                 continue
             mesh_entries += 1
@@ -595,6 +659,7 @@ def schedule_cache_stats() -> dict:
                     ell_entries=len(_ell_cache),
                     mesh_entries=mesh_entries,
                     bucket_entries=bucket_entries,
+                    transpose_entries=transpose_entries,
                     layout_1d=layout_1d, layout_15d=layout_15d,
                     layout_fallback=layout_fallback)
 
@@ -629,7 +694,7 @@ def _spmm_pallas_fits_vmem(entry: ScheduleEntry, c_col: int) -> bool:
              + 2 * j0 * w0      # fused-rows ELL
              + j0 * t           # densified A tile
              + j0 * c_col)      # fused rows out
-    return elems * 4 <= VMEM_BUDGET
+    return elems * entry.dtype_bytes <= VMEM_BUDGET
 
 
 def select_backend(entry: ScheduleEntry) -> str:
@@ -642,9 +707,10 @@ def select_backend(entry: ScheduleEntry) -> str:
         # distributes op-1 rows and wavefront-1 work across the devices
         return "sharded"
     if (entry.sched.fused_ratio < MIN_FUSED_RATIO
-            or tm["traffic_saving"] <= 0.0):
-        # pathological pattern: fusion saves no traffic — Eq 3 says the
-        # intermediate round-trips memory either way, so take the simpler code
+            or tm["traffic_saving"] <= MIN_TRAFFIC_SAVING):
+        # fusion saves no traffic (or too little to cover the tile loop's
+        # off-model fixed costs) — Eq 3 says the intermediate round-trips
+        # memory either way, so take the simpler code
         return "unfused"
     if fused_ops._is_uniform(entry.dsched) and _pallas_capable():
         # both op pairs lower to wavefront-0 Pallas kernels on a uniform
@@ -739,6 +805,148 @@ def _spmm_spmm_pallas(entry: ScheduleEntry, a1: CSR,
 # --------------------------------------------------------------------------
 # The entrypoint
 # --------------------------------------------------------------------------
+def _dispatch(a: CSR, b_or_a1, c, *, backend: str, p: int,
+              cache_size: float, ct_size: int, uniform_split: bool,
+              autotune: bool, width_cap, mesh, shard_combine: str,
+              shard_layout: str, bucket: tuple | None,
+              transpose: bool) -> jax.Array:
+    """The schedule-then-execute tail of ``tile_fused_matmul`` — everything
+    past the custom_vjp seam.  ``transpose=True`` runs the product with all
+    sparse operands transposed (``D = aᵀ·(bᵀ·c)`` structurally — for the
+    GeMM-SpMM pair only ``a`` is sparse, so ``D = aᵀ·(b·c)``), serving the
+    backward pass from the transpose-keyed schedule entry."""
+    b_is_sparse = isinstance(b_or_a1, CSR)
+    a_run = a.transpose() if transpose else a
+    a1_run = (b_or_a1.transpose() if (b_is_sparse and transpose)
+              else b_or_a1)
+
+    def run_unfused():
+        if b_is_sparse:
+            hell_a = _csr_ell(a_run, _resolve_width_cap(a_run, width_cap))
+            hell_a1 = _csr_ell(a1_run,
+                               _resolve_width_cap(a1_run, width_cap))
+            return fused_ops.unfused_spmm_spmm(*hell_a, *hell_a1, c)
+        return fused_ops.unfused_gemm_spmm(
+            *_csr_ell(a_run, _resolve_width_cap(a_run, width_cap)),
+            jnp.asarray(b_or_a1), c)
+
+    if backend == "unfused":
+        return run_unfused()          # no inspection needed for the baseline
+
+    # the cost model's b_col is the width of the intermediate D1's inputs:
+    # dense-B column count for GeMM-SpMM, C's column count for SpMM-SpMM
+    # (op 1 is a1 @ c, so D1 is c_col wide and B's dense charge is c_col)
+    b_col = c.shape[1] if b_is_sparse else b_or_a1.shape[1]
+    dtype_bytes = cost_model.operand_dtype_bytes(
+        c if b_is_sparse else b_or_a1, c)
+    entry = get_schedule(a, b_col=b_col, c_col=c.shape[1], p=p,
+                         cache_size=cache_size, ct_size=ct_size,
+                         b_is_sparse=b_is_sparse, uniform_split=uniform_split,
+                         autotune=autotune, width_cap=width_cap, mesh=mesh,
+                         shard_combine=shard_combine,
+                         shard_layout=shard_layout, bucket=bucket,
+                         transpose=transpose, dtype_bytes=dtype_bytes)
+    chosen = select_backend(entry) if backend == "auto" else backend
+
+    if chosen == "sharded" and entry.shard is None:
+        # trivial mesh (or a non-uniform grid): single-device fallback —
+        # the XLA executor is the sharded path's one-device twin
+        chosen = "xla"
+    if chosen == "unfused":
+        return run_unfused()
+    if chosen == "sharded":
+        if b_is_sparse:
+            return sharded.sharded_spmm_spmm(entry.shard, entry.dsched,
+                                             mesh, a1_run, c)
+        return sharded.sharded_gemm_spmm(entry.shard, mesh,
+                                         jnp.asarray(b_or_a1), c)
+    if b_is_sparse:
+        if chosen == "pallas":
+            return _spmm_spmm_pallas(entry, a1_run, c)
+        return fused_ops.fused_spmm_spmm(entry.dsched, a1_run, c)
+    b = jnp.asarray(b_or_a1)
+    if chosen == "pallas":
+        return _gemm_spmm_pallas(entry, b, c)
+    return fused_ops.fused_gemm_spmm(entry.dsched, b, c)
+
+
+def _bwd_knobs(knobs: dict) -> dict:
+    """Knob set for the backward dispatch: the sparse operands flip their
+    transpose bit (so the backward of an already-transposed product runs
+    on the *forward* schedule — (Aᵀ)ᵀ = A), and the serving ``bucket`` —
+    an inference-only shape key — never leaks into training entries.
+    Everything else (backend, mesh, tile knobs) carries over so the
+    backward lands on the same Eq-3 ``select_backend`` seam."""
+    return dict(knobs, transpose=not knobs["transpose"], bucket=None)
+
+
+def _transpose_spmm(a: CSR, x: jax.Array, *, transpose: bool,
+                    width_cap) -> jax.Array:
+    """Plain ``Aᵀ·x`` (or ``A·x`` when the forward was transposed) — the
+    second sparse product of the GeMM-SpMM backward, served from the same
+    content-keyed full-matrix hybrid-ELL cache the unfused executor uses."""
+    a_eff = a.transpose() if transpose else a
+    return fused_ops.spmm_hybrid(
+        *_csr_ell(a_eff, _resolve_width_cap(a_eff, width_cap)), x)
+
+
+def _gemm_spmm_diff(a: CSR, knobs: dict):
+    """custom_vjp wrapper for the GeMM-SpMM pair (``D = A·(B·C)``).
+
+    The CSR and the dispatch knobs are closed over (a frozen dataclass of
+    ndarrays can't ride through ``nondiff_argnums``, which wants hashable
+    statics); only the dense operands are traced.  Backward: the two
+    transposed sparse-dense products —
+
+      ``dB = Aᵀ·(Ḋ·Cᵀ)``  (a fused GeMM-SpMM against Aᵀ, dispatched
+      through ``tile_fused_matmul`` with the transpose bit flipped, so it
+      hits the cached transpose schedule and the same backend selection),
+      ``dC = Bᵀ·(Aᵀ·Ḋ)``  (one plain SpMM against Aᵀ, then a dense GeMM).
+    """
+    def primal(b, c):
+        return _dispatch(a, b, c, **knobs)
+
+    def fwd(b, c):
+        return primal(b, c), (b, c)
+
+    def bwd(res, dd):
+        b, c = res
+        bk = _bwd_knobs(knobs)
+        db = tile_fused_matmul(a, dd, c.T, **bk)
+        g1 = _transpose_spmm(a, dd, transpose=bk["transpose"],
+                             width_cap=knobs["width_cap"])
+        dc = b.T.astype(g1.dtype) @ g1
+        return jnp.asarray(db, b.dtype), jnp.asarray(dc, c.dtype)
+
+    f = jax.custom_vjp(primal)
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _spmm_spmm_diff(a: CSR, a1: CSR, knobs: dict):
+    """custom_vjp wrapper for the SpMM-SpMM pair (``D = A·(A1·C)``).
+
+    Only the dense ``C`` differentiates (the sparse operands are host
+    CSRs, not traced values).  Its cotangent is itself a fused SpMM-SpMM
+    with the operand roles swapped — ``dC = A1ᵀ·(Aᵀ·Ḋ)`` — dispatched
+    back through ``tile_fused_matmul`` with the transpose bit flipped, so
+    the backward runs the same two-wavefront schedule machinery against
+    the cached transpose entries."""
+    def primal(c):
+        return _dispatch(a, a1, c, **knobs)
+
+    def fwd(c):
+        return primal(c), None
+
+    def bwd(_, dd):
+        dc = tile_fused_matmul(a1, a, dd, **_bwd_knobs(knobs))
+        return (jnp.asarray(dc, dd.dtype),)
+
+    f = jax.custom_vjp(primal)
+    f.defvjp(fwd, bwd)
+    return f
+
+
 def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
                       p: int = 8, cache_size: float = 600_000.0,
                       ct_size: int = 2048, uniform_split: bool = True,
@@ -746,7 +954,8 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
                       width_cap: int | str | None = "auto",
                       mesh=None, shard_combine: str = "auto",
                       shard_layout: str = "auto",
-                      bucket: tuple | None = None) -> jax.Array:
+                      bucket: tuple | None = None,
+                      transpose: bool = False) -> jax.Array:
     """``D = a @ (b_or_a1 @ c)`` through the tile-fusion schedule.
 
     Args:
@@ -790,54 +999,33 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
         the schedule-cache key so same-bucket requests share one entry
         (see ``get_schedule`` and ``serving.ServingTier``, which owns the
         padding + bucket choice; pass it through, don't hand-roll it).
+      transpose: run the product with every sparse operand transposed
+        (``D = aᵀ·(b·c)`` / ``aᵀ·(a1ᵀ·c)``) off the transpose-keyed
+        schedule entry.  This is the backward pass's shape — the
+        custom_vjp sets it internally; callers rarely pass it directly.
+
+    **Differentiable.**  When a dense operand is a JAX tracer (i.e. under
+    ``jax.grad`` / ``jax.vjp`` / ``jax.jit`` of a differentiated
+    function), the call routes through a ``jax.custom_vjp`` whose
+    backward runs the transposed sparse products on this same fused
+    dispatch — the Pallas/XLA/sharded executors serve the backward too,
+    off schedule entries cached with ``transpose=True`` (inspected once
+    per (content, shape), like the forward).  Eager calls with concrete
+    operands — the serving hot path — skip the vjp machinery entirely.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend={backend!r}; expected one of {BACKENDS}")
-    b_is_sparse = isinstance(b_or_a1, CSR)
     c = jnp.asarray(c)
-
-    def run_unfused():
-        if b_is_sparse:
-            hell_a = _csr_ell(a, _resolve_width_cap(a, width_cap))
-            hell_a1 = _csr_ell(b_or_a1,
-                               _resolve_width_cap(b_or_a1, width_cap))
-            return fused_ops.unfused_spmm_spmm(*hell_a, *hell_a1, c)
-        return fused_ops.unfused_gemm_spmm(
-            *_csr_ell(a, _resolve_width_cap(a, width_cap)),
-            jnp.asarray(b_or_a1), c)
-
-    if backend == "unfused":
-        return run_unfused()          # no inspection needed for the baseline
-
-    # the cost model's b_col is the width of the intermediate D1's inputs:
-    # dense-B column count for GeMM-SpMM, C's column count for SpMM-SpMM
-    # (op 1 is a1 @ c, so D1 is c_col wide and B's dense charge is c_col)
-    b_col = c.shape[1] if b_is_sparse else b_or_a1.shape[1]
-    entry = get_schedule(a, b_col=b_col, c_col=c.shape[1], p=p,
-                         cache_size=cache_size, ct_size=ct_size,
-                         b_is_sparse=b_is_sparse, uniform_split=uniform_split,
-                         autotune=autotune, width_cap=width_cap, mesh=mesh,
-                         shard_combine=shard_combine,
-                         shard_layout=shard_layout, bucket=bucket)
-    chosen = select_backend(entry) if backend == "auto" else backend
-
-    if chosen == "sharded" and entry.shard is None:
-        # trivial mesh (or a non-uniform grid): single-device fallback —
-        # the XLA executor is the sharded path's one-device twin
-        chosen = "xla"
-    if chosen == "unfused":
-        return run_unfused()
-    if chosen == "sharded":
-        if b_is_sparse:
-            return sharded.sharded_spmm_spmm(entry.shard, entry.dsched,
-                                             mesh, b_or_a1, c)
-        return sharded.sharded_gemm_spmm(entry.shard, mesh,
-                                         jnp.asarray(b_or_a1), c)
-    if b_is_sparse:
-        if chosen == "pallas":
-            return _spmm_spmm_pallas(entry, b_or_a1, c)
-        return fused_ops.fused_spmm_spmm(entry.dsched, b_or_a1, c)
+    knobs = dict(backend=backend, p=p, cache_size=cache_size,
+                 ct_size=ct_size, uniform_split=uniform_split,
+                 autotune=autotune, width_cap=width_cap, mesh=mesh,
+                 shard_combine=shard_combine, shard_layout=shard_layout,
+                 bucket=bucket, transpose=transpose)
+    if isinstance(b_or_a1, CSR):
+        if isinstance(c, jax.core.Tracer):
+            return _spmm_spmm_diff(a, b_or_a1, knobs)(c)
+        return _dispatch(a, b_or_a1, c, **knobs)
     b = jnp.asarray(b_or_a1)
-    if chosen == "pallas":
-        return _gemm_spmm_pallas(entry, b, c)
-    return fused_ops.fused_gemm_spmm(entry.dsched, b, c)
+    if isinstance(b, jax.core.Tracer) or isinstance(c, jax.core.Tracer):
+        return _gemm_spmm_diff(a, knobs)(b, c)
+    return _dispatch(a, b, c, **knobs)

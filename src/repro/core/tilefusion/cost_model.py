@@ -24,6 +24,27 @@ from ..sparse.formats import CSR, csr_gather_rows
 #: (``formats.hybrid_width_cap``) and the pricing here.
 SPILL_ELEMENTS = 3
 
+#: Bytes of one sparse index (int32) — index traffic does NOT scale with the
+#: value dtype, so byte-level pricing charges it separately from the
+#: ``dtype_bytes`` value traffic.
+INDEX_BYTES = 4
+
+
+def operand_dtype_bytes(*operands, default: int = 4) -> int:
+    """Itemsize of the first operand that has a dtype (the dense operand's
+    itemsize is what every byte price in the system should scale with —
+    bf16 operands move half the bytes of f32, f64 twice).  Non-array
+    operands (e.g. a CSR op-1) are skipped; ``default`` covers the
+    all-sparse / empty case."""
+    for op in operands:
+        dt = getattr(op, "dtype", None)
+        if dt is not None:
+            try:
+                return int(np.dtype(dt).itemsize)
+            except TypeError:
+                continue
+    return int(default)
+
 #: Default fast-memory budget: 64 MiB of the ~128 MiB v5e VMEM (leave half for
 #: double-buffering and the matmul operands), expressed in bytes.
 DEFAULT_VMEM_BUDGET_BYTES = 64 * 1024 * 1024
@@ -333,3 +354,36 @@ def tile_cost_bytes(a, i_start, i_end, j_rows, b_col, c_col, b_is_sparse,
                     dtype_bytes: int = 4) -> float:
     return tile_cost_elements(a, i_start, i_end, j_rows, b_col, c_col,
                               b_is_sparse) * dtype_bytes
+
+
+def spmm_bytes(nnz: int, n_rows: int, n_cols: int, c_col: int,
+               dtype_bytes: int = 4) -> float:
+    """Bytes one plain SpMM ``(n_rows × n_cols) @ (n_cols × c_col)``
+    streams: the dense input and output plus the sparse operand's values
+    (at the operand dtype) and indices (int32)."""
+    return (float(n_cols + n_rows) * c_col + float(nnz)) * dtype_bytes \
+        + float(nnz) * INDEX_BYTES
+
+
+def train_step_traffic(forward_tm: dict, transpose_tm: dict, *, nnz: int,
+                       n_i: int, n_j: int, c_col: int,
+                       dtype_bytes: int = 4) -> dict:
+    """Per-training-step traffic of the differentiable fused path.
+
+    The backward of ``D = A·(B·C)`` is two sparse-dense products against
+    ``Aᵀ`` (paper §4.2.3 applied to training): the fused
+    ``dB = Aᵀ·(Ḋ·Cᵀ)`` — priced by the *transpose entry's* own Eq-3 model,
+    which was inspected with the swapped (b_col, c_col) — plus the plain
+    ``g1 = Aᵀ·Ḋ`` SpMM feeding ``dC = Bᵀ·g1``.  ``forward_tm`` /
+    ``transpose_tm`` are the two entries' ``traffic_model`` dicts."""
+    g1 = spmm_bytes(nnz, n_i, n_j, c_col, dtype_bytes)
+    fwd = float(forward_tm["fused_bytes"])
+    bwd = float(transpose_tm["fused_bytes"]) + g1
+    bwd_unfused = float(transpose_tm["unfused_bytes"]) + g1
+    return {
+        "forward_bytes": fwd,
+        "backward_bytes": bwd,
+        "backward_unfused_bytes": bwd_unfused,
+        "train_step_bytes": fwd + bwd,
+        "backward_saving": 1.0 - bwd / max(bwd_unfused, 1.0),
+    }

@@ -106,23 +106,28 @@ class DeviceSchedule:
         wavefront-0 consumers read D1 from VMEM; only the rows wavefront 1
         needs are spilled (beyond-paper optimization — the paper keeps D1
         resident in DRAM on CPU; on TPU we elide the unneeded writes).
+
+        ``dtype_bytes`` is the *value* itemsize of the dense operands
+        (bf16 = 2, f32 = 4, f64 = 8); index traffic is always int32, so the
+        sparse operand's column indices are priced at 4 bytes regardless.
         """
         n_i, n_j = self.n_i, self.n_j
         nnz0 = float((self.ell_vals0 != 0).sum())
         nnz1 = float((self.ell_vals1 != 0).sum()) \
             + float((self.spill_vals1 != 0).sum())
-        base = (n_i * b_col          # read B
+        vals = (n_i * b_col          # read B
                 + n_j * c_col        # write D
-                + (nnz0 + nnz1) * 2  # A vals + idx
+                + (nnz0 + nnz1)      # A vals
                 + b_col * c_col)     # C
+        idx_bytes = (nnz0 + nnz1) * 4.0   # A idx, int32 at any value dtype
         d1_rt = 2.0 * n_i * c_col    # unfused: D1 write + re-read
         spill = self.wf1_unique_deps()
         d1_fused = 2.0 * spill * c_col
-        unfused = (base + d1_rt) * dtype_bytes
-        fused = (base + d1_fused) * dtype_bytes
+        unfused = (vals + d1_rt) * dtype_bytes + idx_bytes
+        fused = (vals + d1_fused) * dtype_bytes + idx_bytes
         return {"unfused_bytes": unfused, "fused_bytes": fused,
                 "traffic_saving": 1.0 - fused / unfused,
-                "d1_spill_rows": spill}
+                "d1_spill_rows": spill, "dtype_bytes": int(dtype_bytes)}
 
 
 def _ell_arrays(a: CSR, j_rows_list, j_max, pad_row, local_start=None,

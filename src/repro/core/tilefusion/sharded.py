@@ -235,7 +235,8 @@ def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
                            b_is_sparse: bool,
                            width_cap: int | None = None,
                            layout: str = "1d",
-                           combine: str = "auto"):
+                           combine: str = "auto",
+                           dtype_bytes: int = 4):
     """Partition a uniform schedule over a mesh shape (an int or a shape
     tuple) under a layout — ``scheduler.resolve_mesh_layout`` is the one
     place the shape becomes (row shards × column replicas).
@@ -381,7 +382,8 @@ def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
 
     comm = cost_model.shard_comm_model(s_n, h, dsched.n_i, c_col,
                                        n_j=n_j, n_repl=n_repl,
-                                       combine_rows=s_n * r_per)
+                                       combine_rows=s_n * r_per,
+                                       dtype_bytes=dtype_bytes)
     mode = comm["combine"] if combine == "auto" else combine
     return ShardedSchedule(
         n_shards=s_n, n_repl=n_repl, combine=mode,

@@ -34,6 +34,24 @@ def make_train_step(cfg, opt_cfg, rules):
     return train_step
 
 
+def make_gcn_train_step(model, *, lr: float = 0.3, fused: bool = True,
+                        backend: str = None, mesh=None, jit: bool = True):
+    """SGD train step for a ``models.gcn.GCN`` on the fused path.
+
+    The returned ``step(params, x, y) -> (params, loss)`` differentiates
+    through ``tile_fused_matmul``'s custom_vjp, so the backward runs the
+    transposed fused products off the cached transpose schedules — on
+    whatever backend the knobs (or Eq-3 auto selection) resolve to,
+    including under a non-trivial ``mesh=``.  ``jit=False`` returns the
+    eager step (useful for cache-behavior tests)."""
+    def step(params, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, x, y, fused=fused, backend=backend,
+                                 mesh=mesh))(params)
+        return [w - lr * g for w, g in zip(params, grads)], loss
+    return jax.jit(step) if jit else step
+
+
 def make_prefill_step(cfg, rules):
     def prefill_step(params, batch):
         return T.forward(cfg, params, batch, rules=rules)

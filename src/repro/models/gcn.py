@@ -17,11 +17,17 @@ from ..core.tilefusion import api
 
 
 def normalize_adjacency(a: CSR) -> CSR:
-    """Â = D^{-1/2} (A) D^{-1/2} (self-loops assumed already present)."""
+    """Â = D^{-1/2} (A) D^{-1/2} (self-loops assumed already present).
+
+    The degree arithmetic runs in float64 for accuracy, but the result is
+    cast back to ``a.data``'s dtype: a float32 (or bf16) adjacency must
+    not silently become a float64 one, which would hash, pack, and price
+    every downstream schedule at the wrong itemsize."""
     deg = np.maximum(np.diff(a.indptr), 1).astype(np.float64)
     dinv = 1.0 / np.sqrt(deg)
     rows = np.repeat(np.arange(a.n_rows), np.diff(a.indptr))
-    data = a.data * dinv[rows] * dinv[a.indices]
+    data = (a.data * dinv[rows] * dinv[a.indices]).astype(
+        a.data.dtype, copy=False)
     return CSR(a.n_rows, a.n_cols, a.indptr, a.indices, data)
 
 
@@ -37,11 +43,12 @@ class GCN:
         # forward() then hits it for every layer and step
         dims = ([cfg.in_dim] + [cfg.hidden_dim] * (cfg.n_layers - 1)
                 + [cfg.out_dim])
-        entries = [api.get_schedule(self.adj, b_col=dims[i],
-                                    c_col=dims[i + 1], p=p,
-                                    cache_size=cache_size, ct_size=ct_size)
-                   for i in range(cfg.n_layers)]
-        self.entry = entries[0]
+        self.dims = dims
+        self.entries = [
+            api.get_schedule(self.adj, b_col=dims[i], c_col=dims[i + 1],
+                             p=p, cache_size=cache_size, ct_size=ct_size)
+            for i in range(cfg.n_layers)]
+        self.entry = self.entries[0]   # back-compat alias (layer 0)
 
     @property
     def sched(self):
@@ -50,6 +57,29 @@ class GCN:
     @property
     def dsched(self):
         return self.entry.dsched
+
+    def layer_traffic_models(self) -> list:
+        """Per-layer Eq-3 traffic models from the warmed entries — one dict
+        per layer, not just layer 0 (the layers have different ``b_col`` /
+        ``c_col`` and hence different fused savings)."""
+        return [e.traffic_model for e in self.entries]
+
+    def train_step_traffic_models(self) -> list:
+        """Per-layer forward+backward traffic (``cost_model
+        .train_step_traffic``): the transpose entry prices the backward's
+        fused product against Âᵀ, the extra SpMM term its ``Âᵀ·Ḋ``."""
+        from ..core.tilefusion import cost_model
+        out = []
+        for e in self.entries:
+            et = api.get_schedule(self.adj, b_col=e.c_col, c_col=e.b_col,
+                                  p=self.p, cache_size=self.cache_size,
+                                  ct_size=self.ct_size, transpose=True,
+                                  dtype_bytes=e.dtype_bytes)
+            out.append(cost_model.train_step_traffic(
+                e.traffic_model, et.traffic_model, nnz=self.adj.nnz,
+                n_i=self.adj.n_cols, n_j=self.adj.n_rows, c_col=e.c_col,
+                dtype_bytes=e.dtype_bytes))
+        return out
 
     def init_params(self, key):
         cfg = self.cfg
@@ -63,19 +93,24 @@ class GCN:
         ]
 
     def forward(self, params, x, *, fused: bool = True, impl: str = None,
-                backend: str = None):
+                backend: str = None, mesh=None):
         """``backend=`` overrides directly; otherwise the legacy
-        (fused, impl) pair maps onto the API's explicit backends."""
+        (fused, impl) pair maps onto the API's explicit backends.
+        Differentiable end to end: under ``jax.grad`` each layer's
+        backward runs the fused transposed products (api custom_vjp),
+        including under a non-trivial ``mesh=``."""
         be = backend or ("unfused" if not fused
                          else "pallas" if impl == "pallas" else "xla")
         for i, w in enumerate(params):
             h = api.tile_fused_matmul(self.adj, x, w, backend=be, p=self.p,
                                       cache_size=self.cache_size,
-                                      ct_size=self.ct_size)
+                                      ct_size=self.ct_size, mesh=mesh)
             x = jax.nn.relu(h) if i < len(params) - 1 else h
         return x
 
-    def loss(self, params, x, labels, *, fused: bool = True):
-        logits = self.forward(params, x, fused=fused)
+    def loss(self, params, x, labels, *, fused: bool = True,
+             backend: str = None, mesh=None):
+        logits = self.forward(params, x, fused=fused, backend=backend,
+                              mesh=mesh)
         logp = jax.nn.log_softmax(logits, axis=-1)
         return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))

@@ -162,6 +162,19 @@ def test_cost_model_falls_back_to_unfused():
                                rtol=2e-3, atol=2e-3)
 
 
+def test_marginal_traffic_saving_falls_back_to_unfused():
+    """A modeled saving inside (0, MIN_TRAFFIC_SAVING] — positive, but too
+    small to cover the tile loop's off-model fixed costs — must dispatch
+    unfused even though the schedule clears the fused-ratio floor (the
+    hub-heavy GCN training regime where forced-fused ran ~30% slower)."""
+    a = powerlaw_graph(256, 8, seed=11)
+    entry = api.get_schedule(a, b_col=64, c_col=64, cache_size=100_000.0)
+    assert entry.sched.fused_ratio >= api.MIN_FUSED_RATIO
+    assert 0.0 < entry.traffic_model["traffic_saving"] \
+        <= api.MIN_TRAFFIC_SAVING
+    assert api.select_backend(entry) == "unfused"
+
+
 def test_auto_selects_fused_on_friendly_pattern():
     a = banded_spd(512, 4, seed=5)
     entry = api.get_schedule(a, b_col=32, c_col=32, cache_size=100_000.0,

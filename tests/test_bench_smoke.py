@@ -81,6 +81,41 @@ def test_emit_json_roundtrip(tmp_path):
     assert doc["rows"][0]["derived_raw"] == "hit_rate=0.95"
 
 
+def test_bench_smoke_diffs_two_newest_artifacts(tmp_path):
+    """``tools/bench_smoke.diff_latest`` matches rows across the two newest
+    BENCH_*.json artifacts and reports us / derived-metric movement."""
+    import importlib.util
+    import io
+    import json
+    spec = importlib.util.spec_from_file_location(
+        "bench_smoke", os.path.join(REPO_ROOT, "tools", "bench_smoke.py"))
+    bs = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(bs)
+
+    old = tmp_path / "BENCH_20260101.json"
+    new = tmp_path / "BENCH_20260102.json"
+    bench_run.emit_json(str(old),
+                        [("train/gcn/fused", 100.0, "train_step_ms=0.1"),
+                         ("gone/row", 1.0, "")], meta={})
+    bench_run.emit_json(str(new),
+                        [("train/gcn/fused", 150.0, "train_step_ms=0.15"),
+                         ("fresh/row", 1.0, "")], meta={})
+    os.utime(old, (1, 1))                 # force the mtime ordering
+    buf = io.StringIO()
+    bs.diff_latest(str(tmp_path), out=buf)
+    text = buf.getvalue()
+    assert "BENCH_20260101.json -> BENCH_20260102.json" in text
+    assert "train/gcn/fused" in text and "+50%" in text
+    assert "train_step_ms 0.1->0.15" in text
+    assert "gone/row: DROPPED" in text
+    assert "fresh/row: NEW" in text
+    # one artifact only: no diff, no crash
+    buf2 = io.StringIO()
+    os.remove(old)
+    bs.diff_latest(str(tmp_path), out=buf2)
+    assert "fewer than two" in buf2.getvalue()
+
+
 def test_shipped_thresholds_are_wellformed():
     import json
     with open(bench_run.THRESHOLDS_PATH) as f:

@@ -10,6 +10,7 @@ hits/misses/incremental_patches/bucket_entries counters stay truthful
 through ``clear_schedule_cache``; (d) the batching front end returns
 exactly the per-request results.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -26,6 +27,16 @@ from repro.core.tilefusion.serving import (ServingTier, csr_dirty_rows,
 from repro.launch.serve import SubgraphFrontEnd
 
 KNOBS = dict(p=2, cache_size=30_000.0, ct_size=32)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_jit_cache():
+    # The pinned jaxlib's CPU compiler segfaults (deterministically, in
+    # backend_compile) when these tests' executor compilations land on top
+    # of the full suite's accumulated live executables; dropping the
+    # process-wide jit caches first keeps the compile that crashes
+    # identical to the standalone-run one, which is fine.
+    jax.clear_caches()
 
 
 @pytest.fixture(autouse=True)

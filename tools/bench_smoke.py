@@ -1,12 +1,20 @@
 #!/usr/bin/env python
 """Run every benchmark driver at one tiny problem size (bit-rot check).
 
-Equivalent to ``python -m benchmarks.run --smoke``; exists so CI can call a
-single script without remembering the flag.  Run from the repo root with
-``PYTHONPATH=src``.
+Equivalent to ``python -m benchmarks.run --smoke --json``; exists so CI can
+call a single script without remembering the flags.  Run from the repo root
+with ``PYTHONPATH=src``.
+
+After the run, the two newest ``BENCH_*.json`` artifacts in the working
+directory are diffed row by row (per-row ``us`` delta plus any numeric
+derived keys that moved) for trend reporting — smoke timings are noisy,
+but a derived metric (hit rate, fused ratio, max grad error) drifting
+between runs is a real signal.
 """
 from __future__ import annotations
 
+import glob
+import json
 import os
 import sys
 
@@ -15,9 +23,46 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import run  # noqa: E402
 
 
+def diff_latest(directory: str = ".", out=sys.stdout) -> None:
+    """Diff the two newest BENCH_*.json artifacts by row name."""
+    paths = sorted(glob.glob(os.path.join(directory, "BENCH_*.json")),
+                   key=os.path.getmtime)
+    if len(paths) < 2:
+        print("# trend: fewer than two BENCH_*.json artifacts, no diff",
+              file=out)
+        return
+    old_p, new_p = paths[-2], paths[-1]
+    with open(old_p) as f:
+        old = {r["name"]: r for r in json.load(f)["rows"]}
+    with open(new_p) as f:
+        new = {r["name"]: r for r in json.load(f)["rows"]}
+    print(f"# trend: {os.path.basename(old_p)} -> {os.path.basename(new_p)}",
+          file=out)
+    for name in sorted(set(old) | set(new)):
+        if name not in old:
+            print(f"#   {name}: NEW", file=out)
+            continue
+        if name not in new:
+            print(f"#   {name}: DROPPED", file=out)
+            continue
+        o, n = old[name], new[name]
+        parts = []
+        if o["us"]:
+            parts.append(f"us {o['us']:.1f}->{n['us']:.1f} "
+                         f"({(n['us'] - o['us']) / o['us'] * 100:+.0f}%)")
+        for key, ov in sorted(o["derived"].items()):
+            nv = n["derived"].get(key)
+            if (isinstance(ov, float) and isinstance(nv, float)
+                    and nv != ov):
+                parts.append(f"{key} {ov:g}->{nv:g}")
+        if parts:
+            print(f"#   {name}: {'; '.join(parts)}", file=out)
+
+
 def main() -> None:
-    sys.argv = [sys.argv[0], "--smoke"] + sys.argv[1:]
+    sys.argv = [sys.argv[0], "--smoke", "--json"] + sys.argv[1:]
     run.main()
+    diff_latest()
 
 
 if __name__ == "__main__":
