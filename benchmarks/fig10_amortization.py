@@ -20,7 +20,8 @@ from repro.core.tilefusion import api
 from .util import bench_n, bench_suite, time_fn
 
 N = 2048
-KNOBS = dict(p=8, cache_size=300_000.0, ct_size=512, uniform_split=False)
+SPEC = api.FusionSpec(p=8, cache_size=300_000.0, ct_size=512,
+                      uniform_split=False)
 
 
 def run():
@@ -34,15 +35,16 @@ def run():
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
         # first inspection pays the scheduler; the repeat is a cache hit
         t0 = time.perf_counter()
-        entry = api.get_schedule(a, b_col=bcol, c_col=bcol, **KNOBS)
+        entry = api.get_schedule(a, b_col=bcol, c_col=bcol, spec=SPEC)
         t_sched = (time.perf_counter() - t0) * 1e6
         t0 = time.perf_counter()
-        api.get_schedule(a, b_col=bcol, c_col=bcol, **KNOBS)
+        api.get_schedule(a, b_col=bcol, c_col=bcol, spec=SPEC)
         t_cached = (time.perf_counter() - t0) * 1e6
         assert api.schedule_cache_stats()["hits"] >= 1
-        t_f = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", **KNOBS)
+        t_f = time_fn(api.tile_fused_matmul, a, b, c, backend="xla",
+                      spec=SPEC)
         t_u = time_fn(api.tile_fused_matmul, a, b, c, backend="unfused",
-                      **KNOBS)
+                      spec=SPEC)
         gain = t_u - t_f
         runs = t_sched / gain if gain > 0 else float("inf")
         # kernel-path (TPU) amortization: scheduler cost vs the HBM traffic

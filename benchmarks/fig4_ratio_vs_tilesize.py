@@ -20,9 +20,10 @@ def run():
         for name, a in suite.items():
             # p=1: measure the pure ratio-vs-tile-size curve (the paper's
             # Fig 4), not the scheduler's load-balance-clamped t
-            sched = api.get_schedule(a, b_col=64, c_col=64, p=1,
-                                     cache_size=1e12, ct_size=ct,
-                                     uniform_split=False).sched
+            sched = api.get_schedule(
+                a, b_col=64, c_col=64,
+                spec=api.FusionSpec(p=1, cache_size=1e12, ct_size=ct,
+                                    uniform_split=False)).sched
             ratios.append(sched.fused_ratio)
         rows.append((f"fig4/fused_ratio/ct{ct}", 0.0,
                      f"mean_fused_ratio={np.mean(ratios):.3f}"))

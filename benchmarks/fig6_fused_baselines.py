@@ -16,7 +16,8 @@ from .util import bench_n, gmean, time_fn
 
 N = 2048
 P = 8
-KNOBS = dict(p=P, cache_size=300_000.0, ct_size=512, uniform_split=False)
+SPEC = api.FusionSpec(p=P, cache_size=300_000.0, ct_size=512,
+                      uniform_split=False)
 
 
 def run():
@@ -30,7 +31,8 @@ def run():
     for name, a in mats.items():
         b = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
-        t_f = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", **KNOBS)
+        t_f = time_fn(api.tile_fused_matmul, a, b, c, backend="xla",
+                      spec=SPEC)
 
         parts = fused_ops.overlapped_tiles(a, P)
         t_ov = time_fn(fused_ops.overlapped_gemm_spmm, a, parts, b, c)

@@ -16,8 +16,9 @@ from .util import bench_n, bench_suite, gmean, time_fn
 N = 2048
 # step 1 only = cache_size=∞ disables splitting; step 1+2 adds the cost
 # model.  Both are just cache-budget knobs on the unified API.
-K1 = dict(p=8, cache_size=1e12, ct_size=512, uniform_split=False)
-K12 = dict(p=8, cache_size=150_000.0, ct_size=512, uniform_split=False)
+S1 = api.FusionSpec(p=8, cache_size=1e12, ct_size=512, uniform_split=False)
+S12 = api.FusionSpec(p=8, cache_size=150_000.0, ct_size=512,
+                     uniform_split=False)
 
 
 def run():
@@ -29,10 +30,10 @@ def run():
     for name, a in bench_suite(N).items():
         b = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
-        s1 = api.get_schedule(a, b_col=bcol, c_col=bcol, **K1).sched
-        s12 = api.get_schedule(a, b_col=bcol, c_col=bcol, **K12).sched
-        t1 = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", **K1)
-        t12 = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", **K12)
+        s1 = api.get_schedule(a, b_col=bcol, c_col=bcol, spec=S1).sched
+        s12 = api.get_schedule(a, b_col=bcol, c_col=bcol, spec=S12).sched
+        t1 = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", spec=S1)
+        t12 = time_fn(api.tile_fused_matmul, a, b, c, backend="xla", spec=S12)
         sp2.append(t1 / t12)
         rows.append((f"fig9/{name}/step1", t1,
                      f"step12_us={t12:.0f};step2_speedup={t1/t12:.2f};"

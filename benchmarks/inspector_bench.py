@@ -23,6 +23,7 @@ row is the stress case, with one row boosted to degree n/2).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -38,6 +39,7 @@ from .util import bench_n
 N_FULL = 65_536          # ≥ 50k rows (GNN-scale)
 BCOL = 64
 KNOBS = dict(p=8, cache_size=300_000.0, ct_size=2048, uniform_split=True)
+SPEC = api.FusionSpec(**KNOBS)   # the same knobs, as the api's spec object
 HBM_BYTES_PER_S = 819e9  # v5e
 
 
@@ -83,13 +85,13 @@ def run():
             a, reference.build_schedule_ref(a, b_col=BCOL, c_col=BCOL,
                                             **KNOBS)))
         api.clear_schedule_cache()
-        entry = api.get_schedule(a, b_col=BCOL, c_col=BCOL, **KNOBS)
+        entry = api.get_schedule(a, b_col=BCOL, c_col=BCOL, spec=SPEC)
         tm = entry.traffic_model
         gain_s = (tm["unfused_bytes"] - tm["fused_bytes"]) / HBM_BYTES_PER_S
         breakeven = lambda t: f"{t / gain_s:.0f}" if gain_s > 0 else "inf"
         t0 = time.perf_counter()
-        at = api.get_schedule(a, b_col=BCOL, c_col=BCOL, autotune=True,
-                              **KNOBS)
+        at = api.get_schedule(a, b_col=BCOL, c_col=BCOL,
+                              spec=dataclasses.replace(SPEC, autotune=True))
         t_sweep = time.perf_counter() - t0
         # hybrid wavefront-1 packing: capped build time + memory vs pad-to-max
         cap = hybrid_width_cap(np.diff(a.indptr))

@@ -45,17 +45,19 @@ def run():
     bcol = 64
     n = bench_n(2048)
     a = banded_spd(n, 8, seed=9)
-    knobs = dict(p=8, cache_size=300_000.0, ct_size=512)
+    spec = api.FusionSpec(p=8, cache_size=300_000.0, ct_size=512)
     bb = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
     cc = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
     want = fused_ref.unfused_gemm_spmm(a, np.asarray(bb, np.float64),
                                        np.asarray(cc, np.float64))
-    ds = api.get_schedule(a, b_col=bcol, c_col=bcol, **knobs).dsched
+    ds = api.get_schedule(a, b_col=bcol, c_col=bcol, spec=spec).dsched
     j0, w = ds.ell_cols0.shape[1], ds.ell_cols0.shape[2]
     for be in ("pallas", "xla", "unfused"):
-        t_k = time_fn(api.tile_fused_matmul, a, bb, cc, backend=be, **knobs)
+        t_k = time_fn(api.tile_fused_matmul, a, bb, cc, backend=be,
+                      spec=spec)
         err = float(np.abs(np.asarray(
-            api.tile_fused_matmul(a, bb, cc, backend=be, **knobs)) - want).max())
+            api.tile_fused_matmul(a, bb, cc, backend=be,
+                                  spec=spec)) - want).max())
         rows.append((f"kernels/tile_fused_gemm_spmm/{be}", t_k,
                      f"max_err={err:.2e};"
                      f"vmem_tile_t={ops.choose_kernel_tile(bcol, bcol, j0, w)}"))

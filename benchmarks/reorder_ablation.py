@@ -25,13 +25,15 @@ def run():
             block_diag_noise(n, min(512, n // 2), seed=13),
             np.random.default_rng(0).permutation(n)),
     }
-    kw = dict(b_col=64, c_col=64, p=8, cache_size=1e12, ct_size=512,
-              uniform_split=False)
+    spec = api.FusionSpec(p=8, cache_size=1e12, ct_size=512,
+                          uniform_split=False)
     for name, a in mats.items():
-        r0 = api.get_schedule(a, **kw).sched.fused_ratio
+        r0 = api.get_schedule(a, b_col=64, c_col=64,
+                              spec=spec).sched.fused_ratio
         perm = rcm_order(a)
         a2 = permute_csr(a, perm)
-        r1 = api.get_schedule(a2, **kw).sched.fused_ratio
+        r1 = api.get_schedule(a2, b_col=64, c_col=64,
+                              spec=spec).sched.fused_ratio
         rows.append((f"reorder/{name}", 0.0,
                      f"ratio_before={r0:.3f};ratio_after={r1:.3f};"
                      f"bw_before={bandwidth(a)};bw_after={bandwidth(a2)}"))

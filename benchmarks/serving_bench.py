@@ -67,8 +67,8 @@ def _incremental_row(n: int, seed: int = 0):
     """Patch-vs-full-inspection micro at 5% dirty rows; one CSV row."""
     rng = np.random.default_rng(seed)
     a = powerlaw_graph(n, avg_deg=8, seed=seed)
-    entry = api.get_schedule(a, b_col=16, c_col=16, uniform_split=True,
-                             **KNOBS)
+    entry = api.get_schedule(a, b_col=16, c_col=16,
+                             spec=api.FusionSpec(uniform_split=True, **KNOBS))
     k = max(1, n // 20)
     slack = k + 8
     ds = pad_device_schedule(entry.dsched, j1_slots=slack,

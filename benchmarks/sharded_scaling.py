@@ -7,14 +7,20 @@ trivial-mesh fallback, so the driver never bit-rots regardless of the
 environment.  Timings on forced host devices are NOT accelerator
 performance — the derived columns that matter are the partition balance
 and the modeled byte counts from ``cost_model.shard_comm_model``: the
-halo-vs-replication ratio and the output-combine prices
-(``comb_psum`` vs ``comb_rs`` — the reduce-scatter row remap must be
-strictly cheaper whenever more than one shard owns output rows).  On a
-≥4-device platform a second sharded row runs the same problem on a 2-D
-mesh under ``shard_layout="auto"`` so the 1.5D column-replica path is
-exercised and priced too.
+halo-vs-replication ratio, the output-combine prices (``comb_psum`` vs
+``comb_rs``), and the async-overlap pricing (``halo_eff`` /
+``crit_bytes``).  Every sharded cell is timed twice — halo exchange
+synchronous (``t_sync_us``) and issued ahead of the wavefront-0 body
+(``t_overlap_us``) — and reports the layout/overlap choice
+``choose_mesh_layout``'s pricing would make on the same mesh
+(``auto_layout`` / ``auto_overlap``).  On a ≥4-device platform a 2-D mesh
+runs the same problem under ``shard_layout="auto"`` (the 1.5D rung); on a
+≥8-device platform a 2×2×2 mesh runs the 2.5D rung (depth-replicated
+wavefront-1 stacks combined over the ``z`` axis).
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +31,8 @@ from repro.core.sparse.random import banded_spd, powerlaw_graph
 from repro.core.tilefusion import api, fused_ref
 
 from .util import bench_n, time_fn
+
+BASE_SPEC = api.FusionSpec(p=8, cache_size=100_000.0, ct_size=256)
 
 
 def _mesh() -> Mesh:
@@ -40,21 +48,51 @@ def _mesh_2d() -> Mesh | None:
     return Mesh(np.array(devs).reshape(n // 2, 2), ("x", "y"))
 
 
+def _mesh_3d() -> Mesh | None:
+    devs = jax.devices()
+    if len(devs) < 8:
+        return None
+    return Mesh(np.array(devs[:8]).reshape(2, 2, 2), ("x", "y", "z"))
+
+
 def _shard_derived(entry) -> str:
     """Derived columns for a sharded run: partition balance + the comm
-    model's priced bytes (halo, psum combine, reduce-scatter combine)."""
+    model's priced bytes (halo, combines, overlap-effective critical
+    path).  ``combine_bytes`` is the price of the combine the schedule
+    actually chose (plus the 2.5D depth reduction when present) — the
+    thresholds gate rides on it staying off the full-psum cost."""
     if entry.shard is None:
-        return ";trivial_mesh_fallback"
+        return ";trivial_mesh_fallback;combine_bytes=0"
     cm = entry.shard.comm_model
     counts = entry.shard.shard_tile_counts()
+    chosen = (cm["combine_bytes_reduce_scatter"]
+              if entry.shard.combine == "reduce_scatter"
+              else cm["combine_bytes"]) + cm["depth_combine_bytes"]
     return (f";layout={entry.shard.layout}"
             f";combine={entry.shard.combine}"
+            f";overlap={int(entry.shard.overlap)}"
+            f";n_depth={entry.shard.n_depth}"
             f";halo_rows={cm['halo_rows']}"
             f";halo_frac={cm['halo_fraction']:.3f}"
+            f";halo_eff={cm['halo_bytes_effective']:.0f}"
+            f";crit_bytes={cm['critical_bytes']:.0f}"
             f";comb_psum={cm['combine_bytes']:.0f}"
             f";comb_rs={cm['combine_bytes_reduce_scatter']:.0f}"
+            f";combine_bytes={chosen:.0f}"
             f";tiles_per_shard="
             f"{int(counts.min())}-{int(counts.max())}")
+
+
+def _auto_choice(a, *, bcol, mesh, b_is_sparse=False) -> str:
+    """What the Eq-3 pricing picks on this mesh when left to itself."""
+    spec = dataclasses.replace(BASE_SPEC, mesh=mesh, shard_layout="auto",
+                               overlap="auto")
+    entry = api.get_schedule(a, b_col=bcol, c_col=bcol,
+                             b_is_sparse=b_is_sparse, spec=spec)
+    if entry.shard is None:
+        return ";auto_layout=fallback;auto_overlap=0"
+    return (f";auto_layout={entry.shard.layout}"
+            f";auto_overlap={int(entry.shard.overlap)}")
 
 
 def run():
@@ -63,11 +101,13 @@ def run():
     n_dev = len(jax.devices())
     bcol = 32
     n = bench_n(4096)
-    knobs = dict(p=8, cache_size=100_000.0, ct_size=256)
-    mesh_cells = [("sharded", _mesh(), {})]
+    mesh_cells = [("sharded", _mesh(), "1d")]
     mesh2d = _mesh_2d()
     if mesh2d is not None:
-        mesh_cells.append(("sharded2d", mesh2d, {"shard_layout": "auto"}))
+        mesh_cells.append(("sharded2d", mesh2d, "auto"))
+    mesh3d = _mesh_3d()
+    if mesh3d is not None:
+        mesh_cells.append(("sharded3d", mesh3d, "2.5d"))
     mats = {"banded_spd_b8": banded_spd(n, 8, seed=11),
             "powerlaw_d4": powerlaw_graph(n, 4, seed=11)}
     for name, a in mats.items():
@@ -75,43 +115,65 @@ def run():
         c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
         want = fused_ref.unfused_gemm_spmm(a, np.asarray(b, np.float64),
                                            np.asarray(c, np.float64))
-        cells = [("xla", None, {})] + mesh_cells
-        for backend, mesh, extra in cells:
-            kw = dict(extra)
-            if mesh is not None:
-                kw["mesh"] = mesh
-            be = "sharded" if mesh is not None else backend
-            t_us = time_fn(api.tile_fused_matmul, a, b, c,
-                           backend=be, **kw, **knobs)
-            got = api.tile_fused_matmul(a, b, c, backend=be, **kw, **knobs)
+        for backend, mesh, layout in [("xla", None, None)] + mesh_cells:
+            if mesh is None:
+                t_us = time_fn(api.tile_fused_matmul, a, b, c,
+                               backend=backend, spec=BASE_SPEC)
+                got = api.tile_fused_matmul(a, b, c, backend=backend,
+                                            spec=BASE_SPEC)
+                err = float(np.abs(np.asarray(got) - want).max())
+                rows.append((f"sharded/gemm_spmm/{name}/{backend}", t_us,
+                             f"devices={n_dev};max_err={err:.2e}"
+                             ";combine_bytes=0"))
+                continue
+            s_off = dataclasses.replace(BASE_SPEC, mesh=mesh,
+                                        shard_layout=layout, overlap=False)
+            s_on = dataclasses.replace(s_off, overlap=True)
+            t_off = time_fn(api.tile_fused_matmul, a, b, c,
+                            backend="sharded", spec=s_off)
+            t_on = time_fn(api.tile_fused_matmul, a, b, c,
+                           backend="sharded", spec=s_on)
+            got = api.tile_fused_matmul(a, b, c, backend="sharded", spec=s_on)
             err = float(np.abs(np.asarray(got) - want).max())
-            derived = f"devices={n_dev};max_err={err:.2e}"
-            if mesh is not None:
-                entry = api.get_schedule(a, b_col=bcol, c_col=bcol,
-                                         **kw, **knobs)
-                derived += _shard_derived(entry)
-            rows.append((f"sharded/gemm_spmm/{name}/{backend}", t_us,
-                         derived))
+            entry = api.get_schedule(a, b_col=bcol, c_col=bcol, spec=s_on)
+            rows.append((
+                f"sharded/gemm_spmm/{name}/{backend}", t_off,
+                f"devices={n_dev};max_err={err:.2e}"
+                f";t_sync_us={t_off:.0f};t_overlap_us={t_on:.0f}"
+                + _shard_derived(entry)
+                + _auto_choice(a, bcol=bcol, mesh=mesh)))
         # SpMM-SpMM on the powerlaw pattern only (op-1 == A, paper setting)
         if name != "powerlaw_d4":
             continue
         cs = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
         want2 = fused_ref.unfused_spmm_spmm(a, a, np.asarray(cs, np.float64))
-        for backend, mesh, extra in cells:
-            kw = dict(extra)
-            if mesh is not None:
-                kw["mesh"] = mesh
-            be = "sharded" if mesh is not None else backend
-            t_us = time_fn(api.tile_fused_matmul, a, a, cs,
-                           backend=be, **kw, **knobs)
-            got = api.tile_fused_matmul(a, a, cs, backend=be, **kw,
-                                        **knobs)
+        for backend, mesh, layout in [("xla", None, None)] + mesh_cells:
+            if mesh is None:
+                t_us = time_fn(api.tile_fused_matmul, a, a, cs,
+                               backend=backend, spec=BASE_SPEC)
+                got = api.tile_fused_matmul(a, a, cs, backend=backend,
+                                            spec=BASE_SPEC)
+                err = float(np.abs(np.asarray(got) - want2).max())
+                rows.append((f"sharded/spmm_spmm/{name}/{backend}", t_us,
+                             f"devices={n_dev};max_err={err:.2e}"
+                             ";combine_bytes=0"))
+                continue
+            s_off = dataclasses.replace(BASE_SPEC, mesh=mesh,
+                                        shard_layout=layout, overlap=False)
+            s_on = dataclasses.replace(s_off, overlap=True)
+            t_off = time_fn(api.tile_fused_matmul, a, a, cs,
+                            backend="sharded", spec=s_off)
+            t_on = time_fn(api.tile_fused_matmul, a, a, cs,
+                           backend="sharded", spec=s_on)
+            got = api.tile_fused_matmul(a, a, cs, backend="sharded",
+                                        spec=s_on)
             err = float(np.abs(np.asarray(got) - want2).max())
-            derived = f"devices={n_dev};max_err={err:.2e}"
-            if mesh is not None:
-                entry = api.get_schedule(a, b_col=bcol, c_col=bcol,
-                                         b_is_sparse=True, **kw, **knobs)
-                derived += _shard_derived(entry)
-            rows.append((f"sharded/spmm_spmm/{name}/{backend}", t_us,
-                         derived))
+            entry = api.get_schedule(a, b_col=bcol, c_col=bcol,
+                                     b_is_sparse=True, spec=s_on)
+            rows.append((
+                f"sharded/spmm_spmm/{name}/{backend}", t_off,
+                f"devices={n_dev};max_err={err:.2e}"
+                f";t_sync_us={t_off:.0f};t_overlap_us={t_on:.0f}"
+                + _shard_derived(entry)
+                + _auto_choice(a, bcol=bcol, mesh=mesh, b_is_sparse=True)))
     return rows

@@ -22,7 +22,7 @@ from .util import bench_n, bench_suite, gmean, sweep, time_fn
 N = 2048
 P = 8
 CACHE = 300_000.0
-KNOBS = dict(p=P, cache_size=CACHE, ct_size=512)
+SPEC = api.FusionSpec(p=P, cache_size=CACHE, ct_size=512)
 
 
 def run():
@@ -35,12 +35,12 @@ def run():
         for name, a in suite.items():
             b = jnp.asarray(rng.standard_normal((n, bcol)), jnp.float32)
             c = jnp.asarray(rng.standard_normal((bcol, bcol)), jnp.float32)
-            entry = api.get_schedule(a, b_col=bcol, c_col=bcol, **KNOBS)
+            entry = api.get_schedule(a, b_col=bcol, c_col=bcol, spec=SPEC)
             sched = entry.sched
             t_f = time_fn(api.tile_fused_matmul, a, b, c, backend="xla",
-                          **KNOBS)
+                          spec=SPEC)
             t_u = time_fn(api.tile_fused_matmul, a, b, c, backend="unfused",
-                          **KNOBS)
+                          spec=SPEC)
             tm = entry.traffic_model
             speedups[name] = t_u / t_f
             savings[name] = tm["traffic_saving"]

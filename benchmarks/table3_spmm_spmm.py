@@ -24,7 +24,7 @@ from .util import bench_n, bench_suite, gmean, sweep, time_fn
 N = 2048
 P = 8
 CACHE = 300_000.0
-KNOBS = dict(p=P, cache_size=CACHE, ct_size=512)
+SPEC = api.FusionSpec(p=P, cache_size=CACHE, ct_size=512)
 
 
 def run():
@@ -37,14 +37,14 @@ def run():
         for name, a in suite.items():
             c = jnp.asarray(rng.standard_normal((n, ccol)), jnp.float32)
             entry = api.get_schedule(a, b_col=ccol, c_col=ccol,
-                                     b_is_sparse=True, **KNOBS)
+                                     b_is_sparse=True, spec=SPEC)
             sched = entry.sched
             t_f = time_fn(api.tile_fused_matmul, a, a, c, backend="xla",
-                          **KNOBS)
+                          spec=SPEC)
             t_p = time_fn(api.tile_fused_matmul, a, a, c, backend="pallas",
-                          **KNOBS)
+                          spec=SPEC)
             t_u = time_fn(api.tile_fused_matmul, a, a, c, backend="unfused",
-                          **KNOBS)
+                          spec=SPEC)
             tm = entry.traffic_model
             speedups[name] = t_u / t_f
             savings[name] = tm["traffic_saving"]

@@ -86,8 +86,9 @@ def run():
     ad = jnp.asarray(a.to_dense(), jnp.float32)
     t0 = time.perf_counter()
     gb, gc = jax.grad(lambda b_, c_: jnp.sum(
-        w * api.tile_fused_matmul(a, b_, c_, backend="xla",
-                                  cache_size=300_000.0, ct_size=256)),
+        w * api.tile_fused_matmul(
+            a, b_, c_, backend="xla",
+            spec=api.FusionSpec(cache_size=300_000.0, ct_size=256))),
         argnums=(0, 1))(b, c)
     us = (time.perf_counter() - t0) * 1e6
     rb, rc = jax.grad(lambda b_, c_: jnp.sum(w * (ad @ (b_ @ c_))),

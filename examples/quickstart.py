@@ -23,8 +23,8 @@ from repro.models.gcn import GCN
 # swap in powerlaw_graph(...) for the graph group (lower fused ratio)
 n, bcol, ccol = 2048, 64, 64
 a = banded_spd(n, bandwidth=8, seed=0)
-knobs = dict(p=8, cache_size=300_000.0, ct_size=512)
-entry = api.get_schedule(a, b_col=bcol, c_col=ccol, **knobs)
+spec = api.FusionSpec(p=8, cache_size=300_000.0, ct_size=512)
+entry = api.get_schedule(a, b_col=bcol, c_col=ccol, spec=spec)
 sched = entry.sched
 print(f"matrix: {n}x{n}, nnz={a.nnz}")
 print(f"schedule: {len(sched.wavefronts[0])} fused tiles + "
@@ -43,7 +43,7 @@ b = rng.standard_normal((n, bcol))
 c = rng.standard_normal((bcol, ccol))
 d_ref = fused_ref.unfused_gemm_spmm(a, b, c)
 d = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
-                          jnp.asarray(c, jnp.float32), **knobs)
+                          jnp.asarray(c, jnp.float32), spec=spec)
 err = float(np.abs(np.asarray(d) - d_ref).max() / np.abs(d_ref).max())
 print(f"fused (backend=auto -> {api.select_backend(entry)}) "
       f"vs oracle rel err: {err:.2e}")

@@ -27,10 +27,13 @@ class ModelConfig:
     n_experts: int = 0
     moe_top_k: int = 0
     moe_shared_expert: bool = False
-    # ssm / hybrid
-    block_pattern: str = "attn"    # attn | mlstm | mlstm7+slstm | attn+mamba
+    # ssm / hybrid / sparse
+    # attn | mlstm | mlstm7+slstm | attn+mamba | sparse-band
+    block_pattern: str = "attn"
     ssm_state: int = 16
     ssm_head_dim: Optional[int] = None
+    band_window: int = 32          # sparse-band mixer: band width ...
+    band_decay: float = 0.9        # ... and per-step decay
     # enc-dec / frontends
     encoder_layers: int = 0
     encoder_seq: int = 1500        # whisper audio frames after conv stub
@@ -79,6 +82,8 @@ class ModelConfig:
             per_layer = mlstm  # sLSTM blocks are similar order; counted same
         elif self.block_pattern == "attn+mamba":
             per_layer = attn + mamba + ffn
+        elif self.block_pattern == "sparse-band":
+            per_layer = 3 * d * inner + ffn   # wv, wz, w_down
         else:
             per_layer = attn + ffn
         total = self.n_layers * per_layer + 2 * v * d

@@ -13,6 +13,7 @@ from .sharded import ShardedSchedule, build_sharded_schedule, mesh_key
 from . import api, fused_ops, fused_ref, serving, sharded
 from .api import (clear_schedule_cache, get_schedule, schedule_cache_stats,
                   select_backend, tile_fused_matmul)
+from .spec import FusionSpec
 from .serving import ServingTier
 
 __all__ = [
@@ -22,7 +23,7 @@ __all__ = [
     "ShardedSchedule", "build_sharded_schedule", "mesh_key", "sharded",
     "ServingTier", "serving",
     "tile_fused_matmul", "get_schedule", "select_backend",
-    "clear_schedule_cache", "schedule_cache_stats",
+    "clear_schedule_cache", "schedule_cache_stats", "FusionSpec",
     "tile_cost_bytes", "tile_cost_elements", "tile_costs_batch",
     "DEFAULT_CPU_CACHE_BYTES", "DEFAULT_VMEM_BUDGET_BYTES",
 ]

@@ -48,29 +48,48 @@ oldest-first instead of growing without bound.
 ``schedule_cache_stats()`` reports hits/misses/evictions plus live entry
 counts of both caches.
 
-**Sharded dispatch (``mesh=``).**  Passing a non-trivial
-``jax.sharding.Mesh`` partitions the wavefront-0 fused-tile grid row-block
-over the mesh's row shards, contiguous tile groups balanced by their Eq-3
-cost; the per-shard executor runs under ``shard_map`` (wavefront 0 is
-communication-free by the fusion criterion) and the wavefront-1 halo rows
-are all-gathered over the row axis.  The output combine is chosen by
-priced bytes (``shard_combine="auto"``): the row-remapped reduce-scatter
-emits per-shard owner blocks (zero combine collectives — partials are
+**One knob object (``spec=``).**  Every dispatch knob below lives on a
+frozen ``FusionSpec`` (``spec.py``) and callers pass ``spec=``; the spec's
+resolved form (width cap concretized, mesh reduced to ``mesh_key``, inert
+shard knobs collapsed on trivial meshes) is the schedule-cache key tail —
+shared verbatim by the content key, the autotune key, the bucket publish,
+and the custom_vjp backward, so a knob cannot steer dispatch without
+keying the cache.  The historical keyword surface (``p=``, ``ct_size=``,
+``mesh=``, ...) still works as a deprecation shim that builds the spec and
+warns once per process.
+
+**Sharded dispatch (``spec.mesh``).**  A non-trivial ``jax.sharding.Mesh``
+partitions the wavefront-0 fused-tile grid row-block over the mesh's row
+shards, contiguous tile groups balanced by their Eq-3 cost; the per-shard
+executor runs under ``shard_map`` (wavefront 0 is communication-free by
+the fusion criterion) and the wavefront-1 halo rows are all-gathered over
+the row axis.  The output combine is chosen by priced bytes
+(``shard_combine="auto"``): the row-remapped reduce-scatter emits
+per-shard owner blocks (zero combine collectives — partials are
 owner-disjoint by construction) with psum retained as the simple
-fallback.  2-D meshes can split the dense operand's columns over the
-trailing axis (``shard_layout="1.5d"``, the replicated 1.5D layout —
-``cost_model.choose_mesh_layout`` weighs its communication saving against
-the operand copies) or flatten every axis into row shards (``"1d"``).
-The mesh's (axis names, shape) plus both knobs join the schedule-cache
-key; ``schedule_cache_stats()`` reports the mesh-keyed entries as
-``mesh_entries`` with per-layout counters (``layout_1d`` /
-``layout_15d`` / ``layout_fallback``), and a trivial mesh falls back to
-single-device dispatch.  CPU CI exercises the real multi-device path via
+fallback.  Multi-axis meshes can split the dense operand's columns over
+the trailing axis (``shard_layout="1.5d"``) or additionally peel a depth
+axis that replicates wavefront-0 compute and splits the wavefront-1 halo
+per depth layer (``"2.5d"``, staged per-layer halo gathers + one depth
+psum); ``cost_model.choose_mesh_layout`` weighs all rungs — and the
+single-device fallback — by per-device critical-path bytes.
+``spec.overlap`` ("auto" | bool) issues the wavefront-1 halo all-gather
+*before* the wavefront-0 body so the collective hides under
+communication-free compute (double-buffered halo tables;
+``shard_comm_model`` prices the hidden bytes as free only up to the
+modeled wf0 window).  ``spec.n_repl`` pins the total operand-replication
+factor the layout must provide.  The mesh's (axis names, shape) plus the
+shard knobs join the schedule-cache key; ``schedule_cache_stats()``
+reports mesh-keyed entries as ``mesh_entries`` with per-layout counters
+(``layout_1d`` / ``layout_15d`` / ``layout_25d`` / ``layout_fallback``)
+plus ``spec_entries`` (distinct resolved specs among live keys), and a
+trivial mesh falls back to single-device dispatch.  CPU CI exercises the
+real multi-device path via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  See ``sharded.py``.
 
 Everything outside ``core/tilefusion`` (models, examples, benchmarks) routes
-through this module; later PRs extend the seam (GPU backend, 2-D shard
-partitions) without touching call sites.
+through this module; later PRs extend the seam (GPU backend, new layout
+rungs) by adding ``FusionSpec`` fields without touching call sites.
 """
 from __future__ import annotations
 
@@ -90,34 +109,74 @@ from ..sparse.formats import (CSR, DEFAULT_WIDTH_QUANTILE,
 from . import cost_model, fused_ops, sharded
 from .schedule import DeviceSchedule, to_device_schedule
 from .scheduler import Schedule, build_schedule
+from .spec import (FusionSpec, reset_legacy_warning,  # noqa: F401 (re-export)
+                   spec_from_legacy_kwargs)
 
 
 def _shard_for_mesh(a: CSR, sched, dsched, mk: tuple, *, b_col: int,
                     c_col: int, b_is_sparse: bool, width_cap,
                     shard_combine: str, shard_layout: str,
-                    dtype_bytes: int = 4):
+                    dtype_bytes: int = 4, overlap="auto",
+                    n_repl: int | None = None, serial_bytes: float = 0.0):
     """Mesh-shape-aware shard build: resolve how the mesh's axes are used
-    (pure-1D row shards vs 1.5D row × column-replica) and which output
-    combine runs, then build the per-shard schedule.
+    (pure-1D row shards, 1.5D row × column-replica, 2.5D row × replica ×
+    depth) and which output combine runs, then build the per-shard
+    schedule.
 
-    ``shard_layout="auto"`` consults ``cost_model.choose_mesh_layout`` with
-    the schedule's own halo size against the operand bytes replication
-    would copy; ``shard_combine="auto"`` defers to ``shard_comm_model``'s
+    ``shard_layout="auto"`` consults ``cost_model.choose_mesh_layout``,
+    which weighs every layout's per-device critical-path bytes (halo
+    discounted by the ``overlap`` window, combine, depth psum) plus the
+    serial compute split across the row shards against the operand bytes
+    replication copies; when the chooser's winner is the single-device
+    fallback, the entry carries ``shard=None`` and dispatch stays
+    Eq-3-consistent with ``select_backend``.  ``n_repl`` restricts the
+    candidates to layouts whose total replication factor (column replicas
+    × depth) matches, or — with an explicit layout — validates it.
+    ``shard_combine="auto"`` defers to ``shard_comm_model``'s
     psum-vs-reduce-scatter pricing inside the builder."""
+    from .scheduler import resolve_mesh_layout
     shape = mk[1]
     layout = shard_layout
+    # wf0's Eq-3 share bounds the overlap window the chooser prices; the
+    # builder re-resolves "auto" overlap with its exact per-tile costs
+    wf0_bytes = float(serial_bytes) * float(getattr(sched, "fused_ratio",
+                                                    0.0))
     if layout == "auto":
         operand_bytes = (
             float(a.nnz) * (dtype_bytes + cost_model.INDEX_BYTES)
             + float(dsched.n_i * b_col) * dtype_bytes)
-        layout = cost_model.choose_mesh_layout(
+        choice = cost_model.choose_mesh_layout(
             shape, halo_rows=int(dsched.wf1_dep_rows().shape[0]),
             n_i=dsched.n_i, n_j=dsched.n_j, c_col=c_col,
-            operand_bytes=operand_bytes, dtype_bytes=dtype_bytes)["layout"]
+            operand_bytes=operand_bytes, dtype_bytes=dtype_bytes,
+            serial_bytes=float(serial_bytes), overlap=overlap,
+            wf0_bytes=wf0_bytes)
+        if n_repl is not None:
+            cands = {k: v for k, v in choice["candidates"].items()
+                     if k != "fallback"
+                     and v["n_repl"] * v["n_depth"] == int(n_repl)}
+            if not cands:
+                raise ValueError(
+                    f"n_repl={n_repl} is unsatisfiable on mesh shape "
+                    f"{shape}: no layout replicates the operands "
+                    f"{n_repl}x")
+            rank = ("total_per_device" if serial_bytes > 0.0
+                    else "total_bytes")
+            layout = min(cands, key=lambda k: cands[k][rank])
+        else:
+            layout = choice["layout"]
+        if layout == "fallback":
+            return None
+    else:
+        _, nr, nd = resolve_mesh_layout(shape, layout)
+        if n_repl is not None and nr * nd != int(n_repl):
+            raise ValueError(
+                f"n_repl={n_repl} does not match layout {layout!r} on "
+                f"mesh shape {shape} (resolves to {nr}x{nd} replicas)")
     return sharded.build_sharded_schedule(
         a, sched, dsched, shape, b_col=b_col, c_col=c_col,
         b_is_sparse=b_is_sparse, width_cap=width_cap, layout=layout,
-        combine=shard_combine, dtype_bytes=dtype_bytes)
+        combine=shard_combine, dtype_bytes=dtype_bytes, overlap=overlap)
 
 
 def _shard_knobs_key(mk: tuple | None, shard_combine: str,
@@ -138,6 +197,43 @@ def _shard_knobs_key(mk: tuple | None, shard_combine: str,
     if mk is None:
         return (None, None)
     return (str(shard_combine), str(shard_layout))
+
+
+def _coerce_spec(spec, legacy: dict, caller: str) -> FusionSpec:
+    """Resolve the ``spec= | **legacy-kwargs`` surface to one FusionSpec.
+
+    Mixing both raises (two sources of truth for one knob is exactly the
+    bug class the spec removes); bare calls get the default spec."""
+    if legacy:
+        if spec is not None:
+            raise TypeError(
+                f"{caller}() got both spec= and legacy keyword(s) "
+                f"{sorted(legacy)}; put every knob on the FusionSpec")
+        return spec_from_legacy_kwargs(legacy, caller=caller)
+    if spec is None:
+        return FusionSpec()
+    if not isinstance(spec, FusionSpec):
+        raise TypeError(f"{caller}() spec= expects a FusionSpec, got "
+                        f"{type(spec).__name__}")
+    return spec
+
+
+def _spec_key(spec: FusionSpec, *, cap, mk, sk) -> tuple:
+    """THE resolved-spec cache-key tail, shared by every key site (content
+    key, autotune key, bucket publish).  ``cap``/``mk``/``sk`` are the
+    already-resolved width cap, mesh key, and shard-knob pair; on a
+    trivial mesh the overlap/n_repl knobs are inert and collapse to None
+    so ``mesh=None`` entries share regardless of their values.
+    ``spec.dtype_bytes`` must be resolved (int) by the time a key is cut."""
+    if mk is None:
+        ov, nr = None, None
+    else:
+        ov = spec.overlap
+        nr = None if spec.n_repl is None else int(spec.n_repl)
+    return (int(spec.p), float(spec.cache_size), int(spec.ct_size),
+            bool(spec.uniform_split), cap, mk, sk, ov, nr,
+            bool(spec.transpose), int(spec.dtype_bytes))
+
 
 #: Valid ``backend=`` values for tile_fused_matmul.
 BACKENDS = ("auto", "pallas", "xla", "unfused", "sharded")
@@ -333,50 +429,55 @@ def _packed_ell_bytes(a: CSR, dsched: DeviceSchedule, b_is_sparse: bool,
     return vals * dtype_bytes + idx * cost_model.INDEX_BYTES
 
 
-def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
-                 cache_size: float = 600_000.0, ct_size: int = 2048,
-                 b_is_sparse: bool = False, uniform_split: bool = True,
-                 autotune: bool = False,
-                 width_cap: int | str | None = "auto",
-                 mesh=None, shard_combine: str = "auto",
-                 shard_layout: str = "auto",
-                 bucket: tuple | None = None,
-                 transpose: bool = False,
-                 dtype_bytes: int = 4) -> ScheduleEntry:
-    """Run Algorithm 1 once per (content, tile size, cache budget) and
-    memoize; subsequent calls with the same key return the cached entry
-    without touching the scheduler.
+def get_schedule(a: CSR, *, b_col: int, c_col: int,
+                 b_is_sparse: bool = False,
+                 spec: FusionSpec | None = None, **legacy) -> ScheduleEntry:
+    """Run Algorithm 1 once per (content, resolved spec) and memoize;
+    subsequent calls with the same key return the cached entry without
+    touching the scheduler.
 
-    Note: ``uniform_split`` defaults to True here (unlike raw
+    Every knob lives on the ``FusionSpec`` (``spec=``); the historical
+    keyword surface (``p=``, ``ct_size=``, ``mesh=``, ...) still works as
+    a deprecation shim that builds the spec and warns once per process.
+    ``spec.dtype_bytes=None`` defaults to 4 here — without operands there
+    is nothing to infer from (``tile_fused_matmul`` infers before it
+    reaches this point).
+
+    Note: ``spec.uniform_split`` defaults to True (unlike raw
     ``build_schedule``) — the uniform variant is what the zero-padding XLA
     fast path and the Pallas kernel's grid map 1:1 onto.  Call sites that
-    want the paper's recursive step-2 splitting pass it explicitly.
+    want the paper's recursive step-2 splitting set it explicitly.
 
-    ``autotune=True`` replaces the single inspection with an Eq-3 sweep
-    over tile sizes, cache budgets, and hybrid width caps (see module
-    docs); ``ct_size`` / ``cache_size`` / ``width_cap`` then seed the
-    candidate grid instead of being used verbatim.  The sweep itself is
-    memoized, so the grid is inspected once per pattern.
+    ``spec.autotune=True`` replaces the single inspection with a memoized
+    Eq-3 sweep over tile sizes, cache budgets, and hybrid width caps (see
+    module docs); the spec's own ``ct_size`` / ``cache_size`` /
+    ``width_cap`` then seed the candidate grid instead of being used
+    verbatim.
 
-    ``width_cap`` bounds the hybrid-ELL body width (wavefront 1 always;
-    op-1 packing and Eq-3 op-1 pricing when ``b_is_sparse``): ``"auto"``
-    (default) picks the traffic-optimal cap from the degree distribution,
-    ``None`` disables capping (pad-to-max).  The resolved cap is part of
-    the cache key — changing it can never reuse a stale schedule.
+    ``spec.width_cap`` bounds the hybrid-ELL body width (wavefront 1
+    always; op-1 packing and Eq-3 op-1 pricing when ``b_is_sparse``):
+    ``"auto"`` (default) picks the traffic-optimal cap from the degree
+    distribution, ``None`` disables capping (pad-to-max).  The resolved
+    cap is part of the cache key — changing it can never reuse a stale
+    schedule.
 
-    ``mesh`` (a ``jax.sharding.Mesh``) additionally partitions the
+    ``spec.mesh`` (a ``jax.sharding.Mesh``) additionally partitions the
     wavefront-0 tile grid over the mesh's devices (row-block,
-    Eq-3-balanced; 2-D meshes can split the dense operand's columns over
-    the trailing axis — the 1.5D layout) and attaches the per-shard arrays
-    + halo index sets as ``entry.shard``.  ``shard_layout``
-    ("auto" | "1d" | "1.5d") picks how a 2-D mesh's axes are used and
-    ``shard_combine`` ("auto" | "psum" | "reduce_scatter") the output
-    combine; both join the cache key alongside the mesh's (axis names,
-    shape): the same matrix on a different mesh shape or layout
-    re-inspects.  A trivial (single-device or None) mesh keys and
-    dispatches exactly like no mesh.
+    Eq-3-balanced) and attaches the per-shard arrays + halo index sets as
+    ``entry.shard``.  ``spec.shard_layout``
+    ("auto" | "1d" | "1.5d" | "2.5d") picks how a multi-axis mesh's axes
+    are used, ``spec.shard_combine`` ("auto" | "psum" | "reduce_scatter")
+    the output combine, ``spec.overlap`` whether the wavefront-1 halo
+    gather hides under wavefront-0 compute, and ``spec.n_repl`` the
+    required operand-replication factor; all join the cache key alongside
+    the mesh's (axis names, shape): the same matrix on a different mesh
+    shape or layout re-inspects.  A trivial (single-device or None) mesh
+    keys and dispatches exactly like no mesh — the then-inert shard knobs
+    collapse out of the key.  When ``"auto"`` layout pricing concludes
+    even the best mesh layout moves more bytes than single-device
+    execution, ``entry.shard`` stays None (the priced fallback).
 
-    ``bucket`` (the serving tier's knob — see ``serving.ServingTier``)
+    ``spec.bucket`` (the serving tier's knob — see ``serving.ServingTier``)
     replaces the content digest in the cache key with the given shape
     bucket, so every request padded into the same bucket shares one
     entry instead of each pattern minting its own.  Because the key no
@@ -387,24 +488,31 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
     in one bucket occupy exactly one entry.  v1 is single-device:
     ``bucket`` with ``autotune`` or a non-trivial ``mesh`` raises.
 
-    ``transpose=True`` inspects ``a.transpose()`` instead — the backward
-    pass's schedule.  The key stays on the *forward* matrix's digest plus
-    the transpose bit, so the fwd/bwd pair of one training step shares one
-    digest computation and shows up side by side in the cache
-    (``schedule_cache_stats()["transpose_entries"]``).  ``b_col`` /
+    ``spec.transpose=True`` inspects ``a.transpose()`` instead — the
+    backward pass's schedule.  The key stays on the *forward* matrix's
+    digest plus the transpose bit, so the fwd/bwd pair of one training
+    step shares one digest computation and shows up side by side in the
+    cache (``schedule_cache_stats()["transpose_entries"]``).  ``b_col`` /
     ``c_col`` are the dimensions of the transposed product — the caller
     passes them already swapped.
 
-    ``dtype_bytes`` is the dense operand's itemsize; it scales the Eq-3
-    value traffic (index traffic stays at 4 bytes) and joins the cache key
-    so bf16 and f32 runs of one pattern price — and autotune — separately."""
+    ``spec.dtype_bytes`` is the dense operand's itemsize; it scales the
+    Eq-3 value traffic (index traffic stays at 4 bytes) and joins the
+    cache key so bf16 and f32 runs of one pattern price — and autotune —
+    separately."""
+    spec = _coerce_spec(spec, legacy, "get_schedule")
+    if spec.dtype_bytes is None:
+        spec = dataclasses.replace(spec, dtype_bytes=4)
+    else:
+        spec = dataclasses.replace(spec, dtype_bytes=int(spec.dtype_bytes))
+    transpose = spec.transpose
     a_eff = a.transpose() if transpose else a
-    cap = _resolve_width_cap(a_eff, width_cap)
-    mk = sharded.mesh_key(mesh)
-    sk = _shard_knobs_key(mk, shard_combine, shard_layout)
-    dtype_bytes = int(dtype_bytes)
+    cap = _resolve_width_cap(a_eff, spec.width_cap)
+    mk = sharded.mesh_key(spec.mesh)
+    sk = _shard_knobs_key(mk, spec.shard_combine, spec.shard_layout)
+    bucket = spec.bucket
     if bucket is not None:
-        if autotune:
+        if spec.autotune:
             raise ValueError("bucket= does not compose with autotune=True "
                              "(the sweep is per-content; bucket entries "
                              "are shape-keyed)")
@@ -414,18 +522,14 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
         if transpose:
             raise ValueError("bucket= is a serving (inference) knob; it "
                              "does not compose with transpose=True")
-    if autotune:
-        return _autotune_schedule(a, b_col=b_col, c_col=c_col, p=p,
-                                  cache_size=cache_size, ct_size=ct_size,
-                                  b_is_sparse=b_is_sparse,
-                                  uniform_split=uniform_split,
-                                  width_cap=cap, mesh_k=mk, shard_knobs=sk,
-                                  transpose=transpose,
-                                  dtype_bytes=dtype_bytes)
+    if spec.autotune:
+        return _autotune_schedule(a, b_col=b_col, c_col=c_col,
+                                  b_is_sparse=b_is_sparse, spec=spec,
+                                  cap=cap, mk=mk, sk=sk)
     digest = _content_key(a)
-    keybase = ("bucket", tuple(bucket)) if bucket is not None else digest
-    key = (keybase, b_col, c_col, p, float(cache_size), ct_size,
-           b_is_sparse, uniform_split, cap, mk, sk, transpose, dtype_bytes)
+    keybase = ("bucket", bucket) if bucket is not None else digest
+    key = (keybase, b_col, c_col, b_is_sparse,
+           _spec_key(spec, cap=cap, mk=mk, sk=sk))
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None and (bucket is None
@@ -434,20 +538,24 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
             _stats["hits"] += 1
             return entry
     t0 = time.perf_counter()
-    sched = build_schedule(a_eff, b_col=b_col, c_col=c_col, p=p,
-                           cache_size=cache_size, ct_size=ct_size,
+    sched = build_schedule(a_eff, b_col=b_col, c_col=c_col, p=spec.p,
+                           cache_size=spec.cache_size, ct_size=spec.ct_size,
                            b_is_sparse=b_is_sparse,
-                           uniform_split=uniform_split, width_cap=cap)
+                           uniform_split=spec.uniform_split, width_cap=cap)
     dsched = to_device_schedule(a_eff, sched, width_cap=cap)
-    tm = dsched.hbm_traffic_model(b_col, c_col, dtype_bytes=dtype_bytes)
+    tm = dsched.hbm_traffic_model(b_col, c_col,
+                                  dtype_bytes=spec.dtype_bytes)
     tm["packed_ell_bytes"] = _packed_ell_bytes(a_eff, dsched, b_is_sparse,
-                                               dtype_bytes)
+                                               spec.dtype_bytes)
     shard = None
     if mk is not None:
         shard = _shard_for_mesh(a_eff, sched, dsched, mk, b_col=b_col,
                                 c_col=c_col, b_is_sparse=b_is_sparse,
                                 width_cap=cap, shard_combine=sk[0],
-                                shard_layout=sk[1], dtype_bytes=dtype_bytes)
+                                shard_layout=sk[1],
+                                dtype_bytes=spec.dtype_bytes,
+                                overlap=spec.overlap, n_repl=spec.n_repl,
+                                serial_bytes=tm["fused_bytes"])
         if shard is not None:
             tm["sharded"] = shard.comm_model
     entry = ScheduleEntry(sched=sched, dsched=dsched, b_col=b_col,
@@ -456,8 +564,9 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
                           traffic_model=tm, width_cap=cap,
                           mesh_key=mk, shard=shard,
                           content_digest=digest,
-                          bucket=None if bucket is None else tuple(bucket),
-                          transpose=transpose, dtype_bytes=dtype_bytes)
+                          bucket=bucket,
+                          transpose=transpose,
+                          dtype_bytes=spec.dtype_bytes)
     with _lock:
         _stats["misses"] += 1
         _cache_put(_schedule_cache, key, entry)
@@ -465,24 +574,29 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int, p: int = 8,
 
 
 def store_bucket_schedule(entry: ScheduleEntry, *, bucket: tuple,
-                          p: int = 8, cache_size: float = 600_000.0,
-                          ct_size: int = 2048, uniform_split: bool = True,
                           patched: bool = False,
-                          dtype_bytes: int = 4) -> ScheduleEntry:
+                          spec: FusionSpec | None = None,
+                          **legacy) -> ScheduleEntry:
     """Publish a serving-tier entry (headroom-padded at bucket build, or
     patched by the incremental inspector) under its bucket cache key,
     replacing whatever the bucket held.
 
-    The key mirrors ``get_schedule``'s bucket keybase exactly, so the next
-    ``tile_fused_matmul(..., bucket=...)`` dispatch finds this entry;
-    ``entry.content_digest`` must already name the pattern it serves.
-    ``patched=True`` counts the publish as an incremental patch in
-    ``schedule_cache_stats()``."""
+    The key is cut by the same ``_spec_key`` helper ``get_schedule`` uses
+    (bucket keybase, the entry's own resolved width cap, trivial-mesh
+    collapse, transpose forced off — buckets are inference-only), so the
+    next ``tile_fused_matmul(..., spec=...bucket...)`` dispatch finds this
+    entry; ``entry.content_digest`` must already name the pattern it
+    serves.  ``patched=True`` counts the publish as an incremental patch
+    in ``schedule_cache_stats()``."""
     if entry.content_digest is None:
         raise ValueError("bucket entries need content_digest set")
-    key = (("bucket", tuple(bucket)), entry.b_col, entry.c_col, p,
-           float(cache_size), ct_size, entry.b_is_sparse, uniform_split,
-           entry.width_cap, None, (None, None), False, int(dtype_bytes))
+    spec = _coerce_spec(spec, legacy, "store_bucket_schedule")
+    spec = dataclasses.replace(
+        spec, transpose=False, mesh=None,
+        dtype_bytes=4 if spec.dtype_bytes is None else int(spec.dtype_bytes))
+    key = (("bucket", tuple(bucket)), entry.b_col, entry.c_col,
+           entry.b_is_sparse,
+           _spec_key(spec, cap=entry.width_cap, mk=None, sk=(None, None)))
     entry.bucket = tuple(bucket)
     with _lock:
         if patched:
@@ -491,27 +605,29 @@ def store_bucket_schedule(entry: ScheduleEntry, *, bucket: tuple,
     return entry
 
 
-def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
-                       cache_size: float, ct_size: int, b_is_sparse: bool,
-                       uniform_split: bool, width_cap: int | None,
-                       mesh_k: tuple | None = None,
-                       shard_knobs: tuple = (None, None),
-                       transpose: bool = False,
-                       dtype_bytes: int = 4) -> ScheduleEntry:
+def _autotune_schedule(a: CSR, *, b_col: int, c_col: int,
+                       b_is_sparse: bool, spec: FusionSpec, cap: int | None,
+                       mk: tuple | None, sk: tuple) -> ScheduleEntry:
     """Eq-3 tile-size × width-cap sweep, memoized under its own entry.
 
-    Candidates: (AUTOTUNE_CT_GRID ∪ {ct_size, 2048}) × AUTOTUNE_CACHE_SCALES
-    × candidate width caps (``_candidate_width_caps``).  Ranking: Eq-3
-    predicted fast-memory traffic (``fused_bytes``) scaled by the schedule's
-    padded-FLOPs overhead, plus the packed-ELL bytes the cap actually moves;
-    restricted to candidates whose raw traffic does not exceed the default
+    Candidates: (AUTOTUNE_CT_GRID ∪ {spec.ct_size, 2048}) ×
+    AUTOTUNE_CACHE_SCALES × candidate width caps
+    (``_candidate_width_caps``).  Ranking: Eq-3 predicted fast-memory
+    traffic (``fused_bytes``) scaled by the schedule's padded-FLOPs
+    overhead, plus the packed-ELL bytes the cap actually moves; restricted
+    to candidates whose raw traffic does not exceed the default
     ``ct_size=2048`` schedule's at the caller's cap — the anchor itself is
     always a candidate, so the sweep can only improve on the paper's
     heuristic, never regress it.
+
+    ``cap`` / ``mk`` / ``sk`` are the caller-resolved width cap, mesh key,
+    and shard-knob pair; the key is the same ``_spec_key`` tail as every
+    other cache site, under the "autotune" prefix.
     """
-    key = ("autotune", _content_key(a), b_col, c_col, p, float(cache_size),
-           ct_size, b_is_sparse, uniform_split, width_cap, mesh_k,
-           shard_knobs, transpose, int(dtype_bytes))
+    transpose = spec.transpose
+    cache_size = spec.cache_size
+    key = ("autotune", _content_key(a), b_col, c_col, b_is_sparse,
+           _spec_key(spec, cap=cap, mk=mk, sk=sk))
     with _lock:
         entry = _cache_get(_schedule_cache, key)
         if entry is not None:
@@ -521,29 +637,29 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
 
     t0 = time.perf_counter()
     a_eff = a.transpose() if transpose else a
-    cts = sorted(set(AUTOTUNE_CT_GRID) | {ct_size, DEFAULT_CT_SIZE})
-    if width_cap is None:
+    cts = sorted(set(AUTOTUNE_CT_GRID) | {spec.ct_size, DEFAULT_CT_SIZE})
+    if cap is None:
         # pad-to-max resolves to the max-degree cap so keys stay concrete
         counts = np.diff(a_eff.indptr)
         anchor_cap = max(int(counts.max()), 1) if counts.size else 1
     else:
-        anchor_cap = width_cap
+        anchor_cap = cap
     # the cap only reaches Algorithm 1 through the sparse-op-1 Eq-3 charge;
     # for dense B every cap yields the identical host schedule, so sweeping
     # caps there would just re-run the same inspection — keep the caller's
-    caps = _candidate_width_caps(a_eff, width_cap) if b_is_sparse \
+    caps = _candidate_width_caps(a_eff, cap) if b_is_sparse \
         else [anchor_cap]
     candidates: dict = {}
     for ct in cts:
         for scale in AUTOTUNE_CACHE_SCALES:
-            for cap in caps:
-                cand = get_schedule(a, b_col=b_col, c_col=c_col, p=p,
-                                    cache_size=cache_size * scale,
-                                    ct_size=ct, b_is_sparse=b_is_sparse,
-                                    uniform_split=uniform_split,
-                                    width_cap=cap, transpose=transpose,
-                                    dtype_bytes=dtype_bytes)
-                candidates[(ct, cache_size * scale, cap)] = cand
+            for cand_cap in caps:
+                cand_spec = dataclasses.replace(
+                    spec, autotune=False, cache_size=cache_size * scale,
+                    ct_size=ct, width_cap=cand_cap, mesh=None)
+                cand = get_schedule(a, b_col=b_col, c_col=c_col,
+                                    b_is_sparse=b_is_sparse,
+                                    spec=cand_spec)
+                candidates[(ct, cache_size * scale, cand_cap)] = cand
 
     def traffic(e: ScheduleEntry) -> float:
         return e.traffic_model["fused_bytes"]
@@ -562,20 +678,23 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int, p: int,
     best = dataclasses.replace(eligible[best_key], hits=0,
                                autotuned=best_key,
                                inspector_s=time.perf_counter() - t0)
-    if mesh_k is not None:
+    if mk is not None:
         # the sweep's candidates are mesh-free; shard the winner (a fresh
         # traffic_model dict so the single-device candidate stays untouched)
-        shard = _shard_for_mesh(a_eff, best.sched, best.dsched, mesh_k,
+        shard = _shard_for_mesh(a_eff, best.sched, best.dsched, mk,
                                 b_col=b_col, c_col=c_col,
                                 b_is_sparse=b_is_sparse,
                                 width_cap=best.width_cap,
-                                shard_combine=shard_knobs[0],
-                                shard_layout=shard_knobs[1],
-                                dtype_bytes=dtype_bytes)
+                                shard_combine=sk[0],
+                                shard_layout=sk[1],
+                                dtype_bytes=spec.dtype_bytes,
+                                overlap=spec.overlap, n_repl=spec.n_repl,
+                                serial_bytes=best.traffic_model[
+                                    "fused_bytes"])
         tm = dict(best.traffic_model)
         if shard is not None:
             tm["sharded"] = shard.comm_model
-        best = dataclasses.replace(best, mesh_key=mesh_k, shard=shard,
+        best = dataclasses.replace(best, mesh_key=mk, shard=shard,
                                    traffic_model=tm)
     with _lock:
         # first-wins publish: a concurrent sweep on the same key may have
@@ -622,6 +741,9 @@ def clear_schedule_cache() -> None:
         _ell_cache.clear()
         for k in _stats:
             _stats[k] = 0
+    # re-arm the once-per-process legacy-kwargs deprecation warning so
+    # warning tests stay order-independent across the suite
+    reset_legacy_warning()
 
 
 def schedule_cache_stats() -> dict:
@@ -629,9 +751,13 @@ def schedule_cache_stats() -> dict:
     ``mesh_entries`` counts the live schedule entries inspected for a
     non-trivial mesh (the sharded-dispatch tier's cache footprint), broken
     down by the layout the dispatch resolved: ``layout_1d`` (pure row
-    shards), ``layout_15d`` (column-replicated 1.5D), ``layout_fallback``
-    (mesh-keyed entries whose grid couldn't shard — non-uniform schedules
-    dispatching single-device).  ``bucket_entries`` counts the live
+    shards), ``layout_15d`` (column-replicated 1.5D), ``layout_25d``
+    (depth-replicated 2.5D), ``layout_fallback`` (mesh-keyed entries that
+    dispatch single-device — non-uniform grids, or layouts the chooser
+    priced worse than serial).  ``spec_entries`` counts the distinct
+    resolved ``FusionSpec`` key tails among live schedule entries — how
+    many knob combinations the process actually runs (N matrices under
+    one spec keep it at 1).  ``bucket_entries`` counts the live
     shape-bucket entries of the serving tier — N patterns mapping to K
     buckets should hold this (and evictions) at K, the LRU-thrash
     regression the serving tests pin.  ``transpose_entries`` counts the
@@ -639,8 +765,8 @@ def schedule_cache_stats() -> dict:
     training path inspected — one per (graph, shape) when the transpose
     cache amortizes correctly."""
     with _lock, _ell_lock:
-        mesh_entries = layout_1d = layout_15d = layout_fallback = 0
-        bucket_entries = transpose_entries = 0
+        mesh_entries = layout_1d = layout_15d = layout_25d = 0
+        layout_fallback = bucket_entries = transpose_entries = 0
         for e in _schedule_cache.values():
             if e.bucket is not None:
                 bucket_entries += 1
@@ -651,16 +777,23 @@ def schedule_cache_stats() -> dict:
             mesh_entries += 1
             if e.shard is None:
                 layout_fallback += 1
-            elif e.shard.n_repl > 1:
+            elif e.shard.layout == "2.5d":
+                layout_25d += 1
+            elif e.shard.layout == "1.5d":
                 layout_15d += 1
             else:
                 layout_1d += 1
+        # every schedule-cache key ends in the resolved-spec tail
+        # (_spec_key), for both content and "autotune"-prefixed keys
+        spec_entries = len({k[-1] for k in _schedule_cache})
         return dict(_stats, entries=len(_schedule_cache),
                     ell_entries=len(_ell_cache),
                     mesh_entries=mesh_entries,
                     bucket_entries=bucket_entries,
                     transpose_entries=transpose_entries,
+                    spec_entries=spec_entries,
                     layout_1d=layout_1d, layout_15d=layout_15d,
+                    layout_25d=layout_25d,
                     layout_fallback=layout_fallback)
 
 
@@ -805,17 +938,16 @@ def _spmm_spmm_pallas(entry: ScheduleEntry, a1: CSR,
 # --------------------------------------------------------------------------
 # The entrypoint
 # --------------------------------------------------------------------------
-def _dispatch(a: CSR, b_or_a1, c, *, backend: str, p: int,
-              cache_size: float, ct_size: int, uniform_split: bool,
-              autotune: bool, width_cap, mesh, shard_combine: str,
-              shard_layout: str, bucket: tuple | None,
-              transpose: bool) -> jax.Array:
+def _dispatch(a: CSR, b_or_a1, c, *, backend: str,
+              spec: FusionSpec) -> jax.Array:
     """The schedule-then-execute tail of ``tile_fused_matmul`` — everything
-    past the custom_vjp seam.  ``transpose=True`` runs the product with all
-    sparse operands transposed (``D = aᵀ·(bᵀ·c)`` structurally — for the
-    GeMM-SpMM pair only ``a`` is sparse, so ``D = aᵀ·(b·c)``), serving the
-    backward pass from the transpose-keyed schedule entry."""
+    past the custom_vjp seam.  ``spec.transpose=True`` runs the product
+    with all sparse operands transposed (``D = aᵀ·(bᵀ·c)`` structurally —
+    for the GeMM-SpMM pair only ``a`` is sparse, so ``D = aᵀ·(b·c)``),
+    serving the backward pass from the transpose-keyed schedule entry."""
     b_is_sparse = isinstance(b_or_a1, CSR)
+    transpose = spec.transpose
+    width_cap = spec.width_cap
     a_run = a.transpose() if transpose else a
     a1_run = (b_or_a1.transpose() if (b_is_sparse and transpose)
               else b_or_a1)
@@ -837,28 +969,25 @@ def _dispatch(a: CSR, b_or_a1, c, *, backend: str, p: int,
     # dense-B column count for GeMM-SpMM, C's column count for SpMM-SpMM
     # (op 1 is a1 @ c, so D1 is c_col wide and B's dense charge is c_col)
     b_col = c.shape[1] if b_is_sparse else b_or_a1.shape[1]
-    dtype_bytes = cost_model.operand_dtype_bytes(
-        c if b_is_sparse else b_or_a1, c)
-    entry = get_schedule(a, b_col=b_col, c_col=c.shape[1], p=p,
-                         cache_size=cache_size, ct_size=ct_size,
-                         b_is_sparse=b_is_sparse, uniform_split=uniform_split,
-                         autotune=autotune, width_cap=width_cap, mesh=mesh,
-                         shard_combine=shard_combine,
-                         shard_layout=shard_layout, bucket=bucket,
-                         transpose=transpose, dtype_bytes=dtype_bytes)
+    if spec.dtype_bytes is None:
+        spec = dataclasses.replace(spec, dtype_bytes=(
+            cost_model.operand_dtype_bytes(c if b_is_sparse else b_or_a1,
+                                           c)))
+    entry = get_schedule(a, b_col=b_col, c_col=c.shape[1],
+                         b_is_sparse=b_is_sparse, spec=spec)
     chosen = select_backend(entry) if backend == "auto" else backend
 
     if chosen == "sharded" and entry.shard is None:
-        # trivial mesh (or a non-uniform grid): single-device fallback —
-        # the XLA executor is the sharded path's one-device twin
+        # trivial mesh, a non-uniform grid, or the priced single-device
+        # fallback: the XLA executor is the sharded path's one-device twin
         chosen = "xla"
     if chosen == "unfused":
         return run_unfused()
     if chosen == "sharded":
         if b_is_sparse:
             return sharded.sharded_spmm_spmm(entry.shard, entry.dsched,
-                                             mesh, a1_run, c)
-        return sharded.sharded_gemm_spmm(entry.shard, mesh,
+                                             spec.mesh, a1_run, c)
+        return sharded.sharded_gemm_spmm(entry.shard, spec.mesh,
                                          jnp.asarray(b_or_a1), c)
     if b_is_sparse:
         if chosen == "pallas":
@@ -871,13 +1000,16 @@ def _dispatch(a: CSR, b_or_a1, c, *, backend: str, p: int,
 
 
 def _bwd_knobs(knobs: dict) -> dict:
-    """Knob set for the backward dispatch: the sparse operands flip their
-    transpose bit (so the backward of an already-transposed product runs
-    on the *forward* schedule — (Aᵀ)ᵀ = A), and the serving ``bucket`` —
-    an inference-only shape key — never leaks into training entries.
+    """Knob set for the backward dispatch: the spec flips its transpose
+    bit (so the backward of an already-transposed product runs on the
+    *forward* schedule — (Aᵀ)ᵀ = A), and the serving ``bucket`` — an
+    inference-only shape key — never leaks into training entries.
     Everything else (backend, mesh, tile knobs) carries over so the
     backward lands on the same Eq-3 ``select_backend`` seam."""
-    return dict(knobs, transpose=not knobs["transpose"], bucket=None)
+    spec = knobs["spec"]
+    return dict(backend=knobs["backend"],
+                spec=dataclasses.replace(spec, transpose=not spec.transpose,
+                                         bucket=None))
 
 
 def _transpose_spmm(a: CSR, x: jax.Array, *, transpose: bool,
@@ -913,8 +1045,8 @@ def _gemm_spmm_diff(a: CSR, knobs: dict):
         b, c = res
         bk = _bwd_knobs(knobs)
         db = tile_fused_matmul(a, dd, c.T, **bk)
-        g1 = _transpose_spmm(a, dd, transpose=bk["transpose"],
-                             width_cap=knobs["width_cap"])
+        g1 = _transpose_spmm(a, dd, transpose=bk["spec"].transpose,
+                             width_cap=knobs["spec"].width_cap)
         dc = b.T.astype(g1.dtype) @ g1
         return jnp.asarray(db, b.dtype), jnp.asarray(dc, c.dtype)
 
@@ -948,14 +1080,7 @@ def _spmm_spmm_diff(a: CSR, a1: CSR, knobs: dict):
 
 
 def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
-                      p: int = 8, cache_size: float = 600_000.0,
-                      ct_size: int = 2048, uniform_split: bool = True,
-                      autotune: bool = False,
-                      width_cap: int | str | None = "auto",
-                      mesh=None, shard_combine: str = "auto",
-                      shard_layout: str = "auto",
-                      bucket: tuple | None = None,
-                      transpose: bool = False) -> jax.Array:
+                      spec: FusionSpec | None = None, **legacy) -> jax.Array:
     """``D = a @ (b_or_a1 @ c)`` through the tile-fusion schedule.
 
     Args:
@@ -966,43 +1091,31 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
       backend: "auto" (Eq-3 cost model + capability), or an explicit
         "pallas" / "xla" / "unfused" / "sharded" override for benchmarks.
         Both op pairs lower to "pallas" (SpMM-SpMM via the hybrid op-1
-        gather) and to "sharded" (shard_map over ``mesh``).
-      p, cache_size, ct_size, uniform_split: Algorithm-1 knobs, part of the
+        gather) and to "sharded" (shard_map over ``spec.mesh``).
+      spec: a ``FusionSpec`` carrying every other knob — Algorithm-1 tile
+        parameters (``p``, ``cache_size``, ``ct_size``,
+        ``uniform_split``), the ``autotune`` sweep, the hybrid-ELL
+        ``width_cap``, distribution (``mesh``, ``shard_combine``,
+        ``shard_layout``, ``overlap``, ``n_repl``), the serving
+        ``bucket``, the backward-pass ``transpose`` bit, and
+        ``dtype_bytes`` (None = inferred from the dense operands here).
+        ``None`` means the default spec.  See ``spec.FusionSpec`` and
+        ``get_schedule`` for per-knob semantics; the resolved spec is the
         schedule-cache key.
-      autotune: sweep the Eq-3 tile-size × width-cap grid instead of using
-        ``ct_size`` / ``width_cap`` verbatim (memoized; see module docs).
-      width_cap: hybrid-ELL body width cap — "auto" (traffic-optimal from
-        the degree distribution), an explicit int, or None for pad-to-max.
-        Part of the schedule/ELL cache keys.
-      mesh: a ``jax.sharding.Mesh`` to distribute over — the wavefront-0
-        tile grid is partitioned row-block across the mesh's row shards
-        (Eq-3-balanced), wavefront 1 reads an all-gathered halo, and
-        ``backend="auto"`` dispatches to the sharded executors.  On a
-        CPU host, force a multi-device platform with
-        ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  A trivial
-        mesh (one device, or ``mesh=None``) falls back to single-device
-        dispatch — including for ``backend="sharded"``.
-      shard_combine: output-combine strategy over the mesh's row axis —
-        "psum" (full-D all-reduce) or "reduce_scatter" (row-remapped
-        owner blocks: each shard emits only the D rows it owns; the
-        inverse permutation is applied on the way out).  "auto" (default)
-        lets ``cost_model.shard_comm_model`` pick by priced bytes.
-      shard_layout: how a 2-D mesh's axes are used — "1d" flattens every
-        axis into row shards; "1.5d" keeps the leading axis for row
-        blocks and splits the dense operand's columns over the trailing
-        axis (replicating A/B per column group — the
-        communication-vs-memory tradeoff of 1.5D algorithms).  "auto"
-        (default) lets ``cost_model.choose_mesh_layout`` weigh halo bytes
-        against replication memory.  Both knobs join the schedule cache
-        key; on a trivial mesh they are inert.
-      bucket: serving-tier shape bucket — replaces the content digest in
-        the schedule-cache key so same-bucket requests share one entry
-        (see ``get_schedule`` and ``serving.ServingTier``, which owns the
-        padding + bucket choice; pass it through, don't hand-roll it).
-      transpose: run the product with every sparse operand transposed
-        (``D = aᵀ·(b·c)`` / ``aᵀ·(a1ᵀ·c)``) off the transpose-keyed
-        schedule entry.  This is the backward pass's shape — the
-        custom_vjp sets it internally; callers rarely pass it directly.
+      **legacy: the historical keyword surface (``p=``, ``ct_size=``,
+        ``mesh=``, ...) — a deprecation shim that builds the spec for you
+        and warns once per process.  Mixing ``spec=`` with legacy
+        keywords raises.
+
+    Distribution notes: ``spec.mesh`` partitions the wavefront-0 tile
+    grid row-block across the mesh's row shards (Eq-3-balanced);
+    wavefront 1 reads an all-gathered halo, per depth layer under the
+    2.5D layout, optionally issued *before* wavefront 0 so it overlaps
+    communication-free compute (``spec.overlap``).  On a CPU host, force
+    a multi-device platform with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  A trivial
+    mesh (one device, or ``mesh=None``) falls back to single-device
+    dispatch — including for ``backend="sharded"``.
 
     **Differentiable.**  When a dense operand is a JAX tracer (i.e. under
     ``jax.grad`` / ``jax.vjp`` / ``jax.jit`` of a differentiated
@@ -1013,14 +1126,11 @@ def tile_fused_matmul(a: CSR, b_or_a1, c, *, backend: str = "auto",
     per (content, shape), like the forward).  Eager calls with concrete
     operands — the serving hot path — skip the vjp machinery entirely.
     """
+    spec = _coerce_spec(spec, legacy, "tile_fused_matmul")
     if backend not in BACKENDS:
         raise ValueError(f"backend={backend!r}; expected one of {BACKENDS}")
     c = jnp.asarray(c)
-    knobs = dict(backend=backend, p=p, cache_size=cache_size,
-                 ct_size=ct_size, uniform_split=uniform_split,
-                 autotune=autotune, width_cap=width_cap, mesh=mesh,
-                 shard_combine=shard_combine, shard_layout=shard_layout,
-                 bucket=bucket, transpose=transpose)
+    knobs = dict(backend=backend, spec=spec)
     if isinstance(b_or_a1, CSR):
         if isinstance(c, jax.core.Tracer):
             return _spmm_spmm_diff(a, b_or_a1, knobs)(c)

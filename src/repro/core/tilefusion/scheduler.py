@@ -330,21 +330,25 @@ def balanced_contiguous_partition(costs: np.ndarray,
 
 
 #: Layouts a mesh's axes can be resolved into (plus "auto" upstream).
-MESH_LAYOUTS = ("1d", "1.5d")
+MESH_LAYOUTS = ("1d", "1.5d", "2.5d")
 
 
 def resolve_mesh_layout(mesh_shape, layout: str) -> tuple:
     """THE layout rule, defined once: how many row shards × column
-    replicas a mesh shape yields under a layout.
+    replicas × depth replicas a mesh shape yields under a layout.
 
-    ``"1d"`` flattens every mesh axis into row-block shards (a 2-D mesh in
-    C order, matching ``PartitionSpec((ax0, ax1))`` block order); ``"1.5d"``
-    partitions tiles over the *leading* axis only and leaves the trailing
-    axes as column replicas of the dense operand.  A mesh with fewer than
-    two axes has nothing to replicate over, so ``"1.5d"`` degenerates to
-    ``"1d"`` there.  Every consumer (the api dispatch, the partitioner
+    Returns ``(n_row, n_repl, n_depth)``.  ``"1d"`` flattens every mesh
+    axis into row-block shards (a 2-D mesh in C order, matching
+    ``PartitionSpec((ax0, ax1))`` block order); ``"1.5d"`` partitions tiles
+    over the *leading* axis only and leaves the trailing axes as column
+    replicas of the dense operand; ``"2.5d"`` keeps axis 0 for row blocks,
+    axis 1 for column replicas, and folds the remaining axes into a depth
+    dimension that replicates the wavefront-0 compute and splits the
+    wavefront-1 halo work (Bharadwaj et al.'s replication ladder).  A mesh
+    without enough axes degenerates down the ladder ("2.5d" → the "1.5d"
+    resolution → "1d").  Every consumer (the api dispatch, the partitioner
     below, the shard_map axis split in ``models/sharding``) derives its
-    split from this function so the three layers can never disagree."""
+    split from this function so the layers can never disagree."""
     if layout not in MESH_LAYOUTS:
         raise ValueError(f"layout={layout!r}; expected one of "
                          f"{MESH_LAYOUTS}")
@@ -352,19 +356,28 @@ def resolve_mesh_layout(mesh_shape, layout: str) -> tuple:
     total = 1
     for x in shape:
         total *= x
-    if layout == "1.5d" and len(shape) >= 2 and total > shape[0]:
-        return shape[0], total // shape[0]
-    return total, 1
+    if layout == "2.5d" and len(shape) >= 3:
+        depth = 1
+        for x in shape[2:]:
+            depth *= x
+        if depth > 1 and shape[1] > 1:
+            return shape[0], shape[1], depth
+        if depth > 1 and shape[1] == 1:
+            # nothing to column-replicate; fold depth into the replica slot
+            return shape[0], depth, 1
+    if layout in ("1.5d", "2.5d") and len(shape) >= 2 and total > shape[0]:
+        return shape[0], total // shape[0], 1
+    return total, 1, 1
 
 
 def balanced_mesh_partition(costs: np.ndarray, mesh_shape,
                             layout: str = "1d") -> tuple:
-    """2-D-aware front end of ``balanced_contiguous_partition``: resolve a
-    mesh shape + layout into (row-axis tile bounds, n_row, n_repl).
-    Tiles are shared within a replica group, so only the row axis enters
-    the balance."""
-    n_row, n_repl = resolve_mesh_layout(mesh_shape, layout)
-    return balanced_contiguous_partition(costs, n_row), n_row, n_repl
+    """Mesh-aware front end of ``balanced_contiguous_partition``: resolve a
+    mesh shape + layout into (row-axis tile bounds, n_row, n_repl,
+    n_depth).  Tiles are shared within a replica group (and replicated
+    across depth), so only the row axis enters the balance."""
+    n_row, n_repl, n_depth = resolve_mesh_layout(mesh_shape, layout)
+    return balanced_contiguous_partition(costs, n_row), n_row, n_repl, n_depth
 
 
 def fused_compute_ratio(a: CSR, ct_size: int = 2048) -> float:

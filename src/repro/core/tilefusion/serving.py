@@ -332,11 +332,13 @@ class ServingTier:
             r_pad, c_pad = a.n_rows, a.n_cols
         return (r_pad, c_pad, cap_q)
 
-    def _knobs(self) -> dict:
-        return dict(b_col=self.b_col, c_col=self.c_col,
-                    b_is_sparse=self.b_is_sparse, p=self.p,
-                    cache_size=self.cache_size, ct_size=self.ct_size,
-                    uniform_split=True)
+    def _spec(self, *, width_cap, bucket: tuple | None = None):
+        """The tier's ``FusionSpec`` — one construction point so the
+        lookup, the bucket publish, and the hot-path dispatch can never
+        cut different cache keys."""
+        return api.FusionSpec(p=self.p, cache_size=self.cache_size,
+                              ct_size=self.ct_size, uniform_split=True,
+                              width_cap=width_cap, bucket=bucket)
 
     # -- schedule resolution ----------------------------------------------
     def schedule_for(self, a: CSR) -> tuple:
@@ -349,8 +351,10 @@ class ServingTier:
         res = self._residents.get(bucket)
         if res is not None and res.digest == digest:
             self.stats["exact_hits"] += 1
-            entry = api.get_schedule(ap, width_cap=bucket[2], bucket=bucket,
-                                     **self._knobs())
+            entry = api.get_schedule(
+                ap, b_col=self.b_col, c_col=self.c_col,
+                b_is_sparse=self.b_is_sparse,
+                spec=self._spec(width_cap=bucket[2], bucket=bucket))
             return entry, ap, "hit"
         if res is not None:
             dirty = csr_dirty_rows(res.a, ap)
@@ -360,14 +364,15 @@ class ServingTier:
                                              cache_size=self.cache_size)
                 if patched is not None:
                     api.store_bucket_schedule(
-                        patched, bucket=bucket, p=self.p,
-                        cache_size=self.cache_size, ct_size=self.ct_size,
-                        patched=True)
+                        patched, bucket=bucket, patched=True,
+                        spec=self._spec(width_cap=bucket[2]))
                     self._residents[bucket] = _Resident(ap, digest, patched)
                     self.stats["incremental"] += 1
                     return patched, ap, "incremental"
-        entry = api.get_schedule(ap, width_cap=bucket[2], bucket=bucket,
-                                 **self._knobs())
+        entry = api.get_schedule(
+            ap, b_col=self.b_col, c_col=self.c_col,
+            b_is_sparse=self.b_is_sparse,
+            spec=self._spec(width_cap=bucket[2], bucket=bucket))
         entry = self._with_headroom(ap, entry, bucket)
         self._residents[bucket] = _Resident(ap, digest, entry)
         self.stats["rebuilds"] += 1
@@ -390,8 +395,7 @@ class ServingTier:
         padded = dataclasses.replace(entry, dsched=ds, traffic_model=tm,
                                      content_digest=csr_content_digest(ap))
         return api.store_bucket_schedule(
-            padded, bucket=bucket, p=self.p, cache_size=self.cache_size,
-            ct_size=self.ct_size)
+            padded, bucket=bucket, spec=self._spec(width_cap=bucket[2]))
 
     # -- the hot path -----------------------------------------------------
     def matmul(self, a: CSR, b_or_a1, c):
@@ -423,10 +427,9 @@ class ServingTier:
         if cp.shape[1] != self.c_col:
             raise ValueError(f"c has {cp.shape[1]} columns, tier serves "
                              f"c_col={self.c_col}")
-        d = api.tile_fused_matmul(ap, op1, cp, backend=self.backend,
-                                  p=self.p, cache_size=self.cache_size,
-                                  ct_size=self.ct_size, uniform_split=True,
-                                  width_cap=bucket[2], bucket=bucket)
+        d = api.tile_fused_matmul(
+            ap, op1, cp, backend=self.backend,
+            spec=self._spec(width_cap=bucket[2], bucket=bucket))
         return d[: a.n_rows]
 
     def hit_rate(self) -> float:

@@ -54,6 +54,31 @@ across the replica axis (the memory cost) while every communication term
 communication saving).  ``cost_model.choose_mesh_layout`` weighs the two
 against flattening the whole mesh into row shards (pure 1-D).
 
+3-D meshes (the 2.5D rung of the same ladder): axes past the second fold
+into ``n_depth`` *depth layers* that replicate the wavefront-0 compute
+(only layer 0's devices emit the wf0 fused rows — the depth combine
+restores them everywhere) and split the wavefront-1 work: wf1 tiles and
+spill lanes are partitioned over ``n_shards × n_depth`` groups, and each
+depth layer assembles only *its own* halo table — the union of its
+groups' dependency rows — with a row-axis all-gather.  That is the
+staged exchange: ``n_depth`` leaf gathers run in parallel (each device
+moves ~1/n_depth of the 1.5D halo share) and the depth-axis psum of the
+partial outputs is the root combine.
+
+Async overlap (``overlap=True`` / ``"auto"``): the halo all-gather is
+issued *before* the main wavefront-0 body — each shard first recomputes
+just its halo send rows' D1 values (a small duplicate-compute prologue:
+``b[send] @ C`` on the GeMM path, the send rows' hybrid-ELL lanes on the
+SpMM path), launches the gather from those, and only then runs full
+wavefront 0 — so the collective hides under the communication-free
+compute the fusion criterion guarantees.  The halo table is
+double-buffered: the executor keeps two persistent scratch tables per
+dtype and alternates them call to call, scattering each gather into the
+idle buffer so wavefront 0 never waits on an in-flight gather from the
+previous call.  Stale pad slots are harmless — every wf1 read multiplies
+them by a zero value slot.  ``cost_model.shard_comm_model`` prices the
+hidden bytes against the duplicate prologue compute.
+
 Static shapes: per-shard tile counts differ, so the stacked arrays are
 padded to the max tiles/rows per shard; padded slots reuse the schedule's
 own conventions (row ``n_j`` — or ``rows_per_shard`` for the local output
@@ -106,6 +131,8 @@ class ShardedSchedule:
     n_shards: int                 # row-block shards (the mesh's row axis)
     n_repl: int                   # column replicas (1 = pure 1-D layout)
     combine: str                  # "psum" | "reduce_scatter"
+    n_depth: int                  # depth layers (1 = no 2.5D replication)
+    overlap: bool                 # async halo gather under wf0 compute
     t_pad: int
     n_i: int
     n_j: int
@@ -118,20 +145,28 @@ class ShardedSchedule:
     j_rows0: np.ndarray           # (S*T0s, j0_max) global D rows, pad = n_j
     ell_cols0: np.ndarray         # (S*T0s, j0_max, w0) tile-local
     ell_vals0: np.ndarray
-    # wavefront 1 (cols remapped to halo-table positions)
+    # wavefront 1, stacked over G = S*Z groups (cols remapped to the
+    # group's depth layer's halo-table positions)
     wf1_per_shard: int            # T1s (padded; 0 = empty wavefront)
-    j_rows1: np.ndarray           # (S*T1s, j1_max) pad = n_j
-    ell_cols1: np.ndarray         # (S*T1s, j1_max, w1) halo positions
+    j_rows1: np.ndarray           # (G*T1s, j1_max) pad = n_j
+    ell_cols1: np.ndarray         # (G*T1s, j1_max, w1) halo positions
     ell_vals1: np.ndarray
     spill_per_shard: int          # L (padded)
-    spill_rows1: np.ndarray       # (S*L,) global D rows, pad = n_j
-    spill_cols1: np.ndarray       # (S*L,) halo positions, pad = 0
-    spill_vals1: np.ndarray       # (S*L,) pad = 0
-    # halo exchange
+    spill_rows1: np.ndarray       # (G*L,) global D rows, pad = n_j
+    spill_cols1: np.ndarray       # (G*L,) halo positions, pad = 0
+    spill_vals1: np.ndarray       # (G*L,) pad = 0
+    # halo exchange (per depth layer; Z = 1 is the flat single-table case)
     halo_rows: np.ndarray         # (H,) sorted global D1 rows wf1 reads
+    halo_pad: int                 # Hp: padded per-layer halo-table height
     send_per_shard: int           # Hs (padded)
-    send_local: np.ndarray        # (S*Hs,) shard-local padded row, pad = 0
-    send_pos: np.ndarray          # (S, Hs) halo-table position, pad = H
+    send_local: np.ndarray        # (G*Hs,) shard-local padded row, pad = 0
+    send_pos: np.ndarray          # (Z, S, Hs) layer-table position, pad=Hp
+    # async-overlap composed indexing: wavefront-1 column/spill indices
+    # remapped from layer-table POSITIONS to SLOTS of the raw all-gather
+    # result (s * Hs + k), so the deferred exchange never materializes the
+    # halo table at all — the gather's flat output is read directly
+    ell_cols1_ov: np.ndarray      # (G*T1s, j1_max, w1) gather slots
+    spill_cols1_ov: np.ndarray    # (G*L,) gather slots, pad = 0
     # output ownership (the reduce-scatter row remap): every D row is
     # owned by the one shard that writes it — wf0 fused rows by their
     # tile's shard, wf1 rows by their wf1 tile's shard
@@ -151,7 +186,10 @@ class ShardedSchedule:
 
     @property
     def layout(self) -> str:
-        """"1d" (row shards only) or "1.5d" (column replicas too)."""
+        """"1d" (row shards only), "1.5d" (column replicas too), or
+        "2.5d" (depth layers as well)."""
+        if self.n_depth > 1:
+            return "2.5d"
         return "1d" if self.n_repl == 1 else "1.5d"
 
     def shard_tile_counts(self) -> np.ndarray:
@@ -236,21 +274,27 @@ def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
                            width_cap: int | None = None,
                            layout: str = "1d",
                            combine: str = "auto",
-                           dtype_bytes: int = 4):
+                           dtype_bytes: int = 4,
+                           overlap: bool | str = False):
     """Partition a uniform schedule over a mesh shape (an int or a shape
     tuple) under a layout — ``scheduler.resolve_mesh_layout`` is the one
-    place the shape becomes (row shards × column replicas).
+    place the shape becomes (row shards × column replicas × depth layers).
 
     ``combine`` picks the output-combine strategy (``"auto"`` defers to
-    ``shard_comm_model``'s byte pricing).  Returns ``None`` when the
-    schedule is not a uniform wavefront-0 grid (the caller falls back to
-    single-device dispatch)."""
+    ``shard_comm_model``'s byte pricing); ``overlap`` enables the async
+    halo gather (``"auto"`` defers to the same model's hidden-bytes vs
+    duplicate-compute pricing).  Returns ``None`` when the schedule is not
+    a uniform wavefront-0 grid (the caller falls back to single-device
+    dispatch)."""
     if combine not in COMBINE_MODES + ("auto",):
         raise ValueError(f"combine={combine!r}; expected one of "
                          f"{COMBINE_MODES + ('auto',)}")
-    s_n, n_repl = resolve_mesh_layout(mesh_shape, layout)
-    if s_n * n_repl <= 1 or not fused_ops._is_uniform(dsched):
+    if not isinstance(overlap, (bool, np.bool_)) and overlap != "auto":
+        raise ValueError(f"overlap={overlap!r}; expected a bool or 'auto'")
+    s_n, n_repl, n_depth = resolve_mesh_layout(mesh_shape, layout)
+    if s_n * n_repl * n_depth <= 1 or not fused_ops._is_uniform(dsched):
         return None
+    n_groups = s_n * n_depth       # wf1 work groups: row shard × depth
     t = dsched.t_pad
     n_t = dsched.n_tiles0
     n_j = dsched.n_j
@@ -280,99 +324,183 @@ def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
                + np.arange(t, dtype=np.int64)[None, :])
     row_map = np.where(valid[:, None], row_map, 0).reshape(-1)
 
-    # ---- halo: owner of each wavefront-1 dependency row ----
+    # ---- wavefront 1: cost-balanced tile partition over S*Z groups
+    # (group g = shard * Z + layer; Z = 1 reduces to the per-shard split).
     halo_rows = dsched.wf1_dep_rows()
     h = int(halo_rows.shape[0])
     row_bounds = tile_bounds * t
-    if h:
-        owner = np.searchsorted(row_bounds, halo_rows, side="right") - 1
-        owner = np.clip(owner, 0, s_n - 1)
-        # halo_rows is sorted and ownership is contiguous, so the stable
-        # group order is the identity: slot = rank within the shard's run
-        _, hs, h_ord, h_dst = _pack_by_group(owner, s_n)
-        send_local = np.zeros(s_n * hs, dtype=np.int32)
-        send_pos = np.full(s_n * hs, h, dtype=np.int32)
-        send_local[h_dst] = (halo_rows - row_bounds[owner]).astype(
-            np.int32)[h_ord]
-        send_pos[h_dst] = np.arange(h, dtype=np.int32)[h_ord]
-        send_pos = send_pos.reshape(s_n, hs)
-    else:
-        hs = 1
-        send_local = np.zeros(s_n * 1, dtype=np.int32)
-        send_pos = np.full((s_n, 1), 0, dtype=np.int32)
-
-    # ---- wavefront 1: cost-balanced tile partition + halo remap ----
     n_t1 = dsched.n_tiles1
     if n_t1:
         costs1 = cost_model.tile_costs_batch(
             a, np.zeros(n_t1, np.int64), np.zeros(n_t1, np.int64),
             [tl.j_rows for tl in wf1], b_col, c_col, b_is_sparse,
             width_cap=width_cap)
-        bounds1 = balanced_contiguous_partition(costs1, s_n)
+        bounds1 = balanced_contiguous_partition(costs1, n_groups)
         per1 = np.diff(bounds1)
         t1s = max(int(per1.max()), 1)
-        tmap1 = np.full((s_n, t1s), n_t1, dtype=np.int64)
-        for s in range(s_n):
-            ids = np.arange(bounds1[s], bounds1[s + 1], dtype=np.int64)
-            tmap1[s, : ids.size] = ids
+        tmap1 = np.full((n_groups, t1s), n_t1, dtype=np.int64)
+        for g in range(n_groups):
+            ids = np.arange(bounds1[g], bounds1[g + 1], dtype=np.int64)
+            tmap1[g, : ids.size] = ids
         tmap1 = tmap1.reshape(-1)
         j_rows1 = _pad_gather(dsched.j_rows1, tmap1, n_j)
-        cols1 = _pad_gather(dsched.ell_cols1, tmap1, 0)
+        cols1_g = _pad_gather(dsched.ell_cols1, tmap1, 0)    # global rows
         vals1 = _pad_gather(dsched.ell_vals1, tmap1, 0)
-        cols1 = _remap_to_halo(cols1, halo_rows)
+        grp_of_t1 = _owner_of_tiles(bounds1, np.arange(n_t1, dtype=np.int64),
+                                    n_groups)
     else:
-        bounds1 = np.zeros(s_n + 1, dtype=np.int64)
+        bounds1 = np.zeros(n_groups + 1, dtype=np.int64)
         t1s = 0
         j_rows1 = np.full((0, 1), n_j, dtype=np.int32)
-        cols1 = np.zeros((0, 1, 1), dtype=np.int32)
+        cols1_g = np.zeros((0, 1, 1), dtype=np.int32)
         vals1 = np.zeros((0, 1, 1), dtype=np.float32)
+        grp_of_t1 = np.zeros(0, dtype=np.int64)
 
     # ---- output ownership: row -> owning shard -> permuted position ----
     # Every D row is written by exactly one tile (Schedule.validate), so
     # the per-shard write sets are disjoint and exhaustive: wf0 fused rows
-    # belong to their tile's shard, wf1 rows to their wf1 tile's shard.
+    # belong to their tile's shard, wf1 rows to their wf1 tile's shard
+    # (= its group's row shard).  ``grp_row`` additionally remembers the
+    # full (shard, layer) group for wf1 rows, which co-locates spill lanes
+    # and assigns halo deps to depth layers; wf0 rows sit at layer 0.
     own_row = np.zeros(max(n_j, 1), dtype=np.int64)
     sizes0 = np.asarray([tl.n_j for tl in wf0], dtype=np.int64)
     if sizes0.sum():
         j0_all = np.concatenate([tl.j_rows for tl in wf0]).astype(np.int64)
         t0_of = np.repeat(np.arange(len(wf0), dtype=np.int64), sizes0)
         own_row[j0_all] = _owner_of_tiles(tile_bounds, t0_of, s_n)
+    grp_row = own_row * n_depth
     if n_t1:
         sizes1 = np.asarray([tl.n_j for tl in wf1], dtype=np.int64)
         j1_all = np.concatenate([tl.j_rows for tl in wf1]).astype(np.int64)
         t1_of = np.repeat(np.arange(n_t1, dtype=np.int64), sizes1)
-        own_row[j1_all] = _owner_of_tiles(bounds1, t1_of, s_n)
+        own_row[j1_all] = grp_of_t1[t1_of] // n_depth
+        grp_row[j1_all] = grp_of_t1[t1_of]
     own_row = own_row[:n_j]
+    grp_row = grp_row[: max(n_j, 1)]
     _, r_per, o_ord, o_dst = _pack_by_group(own_row, s_n)
     pos_of_row = np.empty(n_j, dtype=np.int64)
     pos_of_row[o_ord] = o_dst
 
+    # ---- spill-lane grouping (needed before the halo tables: a spill's
+    # halo dep must live in its depth layer's table) ----
+    n_sp = int(dsched.spill_rows1.shape[0])
+    if n_sp:
+        sp_grp = grp_row[dsched.spill_rows1.astype(np.int64)]
+    else:
+        sp_grp = np.zeros(0, dtype=np.int64)
+
+    # ---- halo: per-depth-layer dependency tables + send schedules ----
+    # Layer z's table H_z is the union of its groups' wf1 deps; Z = 1
+    # makes H_0 exactly ``wf1_dep_rows()`` (the flat single-table case).
+    if n_depth > 1:
+        layer_of_t1 = grp_of_t1 % n_depth
+        halo_layers_list = []
+        for z in range(n_depth):
+            parts = []
+            if n_t1:
+                tz = np.where(layer_of_t1 == z)[0]
+                if tz.size:
+                    cz = dsched.ell_cols1[tz][dsched.ell_vals1[tz] != 0]
+                    parts.append(cz.ravel().astype(np.int64))
+            if n_sp:
+                m = (sp_grp % n_depth == z) & (dsched.spill_vals1 != 0)
+                parts.append(dsched.spill_cols1[m].astype(np.int64))
+            hz = (np.unique(np.concatenate(parts)) if parts
+                  else np.zeros(0, dtype=np.int64))
+            halo_layers_list.append(hz)
+    else:
+        halo_layers_list = [halo_rows.astype(np.int64)]
+    h_pad = max(max((hz.size for hz in halo_layers_list), default=0), 1)
+    cnt = np.zeros((s_n, n_depth), dtype=np.int64)
+    own_z = []
+    for z, hz in enumerate(halo_layers_list):
+        if hz.size:
+            oz = np.clip(np.searchsorted(row_bounds, hz, side="right") - 1,
+                         0, s_n - 1)
+        else:
+            oz = np.zeros(0, dtype=np.int64)
+        own_z.append(oz)
+        cnt[:, z] = np.bincount(oz, minlength=s_n)
+    hs = max(int(cnt.max()), 1)
+    send_local = np.zeros(n_groups * hs, dtype=np.int32)
+    send_pos = np.full((n_depth, s_n, hs), h_pad, dtype=np.int32)
+    for z, hz in enumerate(halo_layers_list):
+        if not hz.size:
+            continue
+        oz = own_z[z]
+        # hz is sorted and ownership is contiguous, so the stable group
+        # order is the identity: slot = rank within the shard's run
+        offs = np.concatenate([[0], np.cumsum(cnt[:, z])])
+        rank = np.arange(hz.size, dtype=np.int64) - offs[oz]
+        g = oz * n_depth + z
+        send_local[g * hs + rank] = (hz - row_bounds[oz]).astype(np.int32)
+        send_pos[z, oz, rank] = np.arange(hz.size, dtype=np.int32)
+    if h == 0:
+        send_pos = np.zeros((n_depth, s_n, hs), dtype=np.int32)
+
+    # overlap slot composition: per layer, table position p lives at slot
+    # (s * hs + k) of the raw all-gather output — composing wf1's position
+    # indices with that map at build time lets the async path skip the
+    # per-call table scatter entirely (pad positions fold to slot 0, whose
+    # junk value is killed by the matching zero pad values)
+    slot_of = np.zeros((n_depth, h_pad + 1), dtype=np.int32)
+    for z in range(n_depth):
+        pz = send_pos[z]                        # (S, Hs) positions
+        valid_p = pz < h_pad
+        slot = (np.arange(s_n, dtype=np.int32)[:, None] * hs
+                + np.arange(hs, dtype=np.int32)[None, :])
+        slot_of[z][pz[valid_p]] = slot[valid_p]
+
+    # ---- wavefront-1 halo remap: each group's cols against its layer ----
+    if n_depth > 1 and n_t1:
+        cols1 = np.zeros_like(cols1_g, dtype=np.int32)
+        layer_of_stack = (np.repeat(np.arange(n_groups, dtype=np.int64),
+                                    t1s) % n_depth)
+        for z in range(n_depth):
+            m = layer_of_stack == z
+            if m.any():
+                cols1[m] = _remap_to_halo(cols1_g[m], halo_layers_list[z])
+    else:
+        cols1 = _remap_to_halo(cols1_g, halo_layers_list[0]) if n_t1 \
+            else cols1_g
+
     shard_of0 = np.repeat(np.arange(s_n, dtype=np.int64), t0s)
     out_rows0 = _local_out_rows(j_rows0, shard_of0, pos_of_row, n_j, r_per)
     if t1s:
-        shard_of1 = np.repeat(np.arange(s_n, dtype=np.int64), t1s)
+        shard_of1 = np.repeat(np.arange(n_groups, dtype=np.int64)
+                              // n_depth, t1s)
         out_rows1 = _local_out_rows(j_rows1, shard_of1, pos_of_row, n_j,
                                     r_per)
     else:
         out_rows1 = np.full(j_rows1.shape, r_per, dtype=np.int32)
 
-    # ---- spill lanes: co-located with their target row's owner (the
-    # shard whose wf1 tile wrote the body, so the reduce-scatter partials
-    # stay owner-disjoint and the body .set always precedes the .add) ----
-    n_sp = int(dsched.spill_rows1.shape[0])
+    # ---- spill lanes: co-located with their target row's owning group
+    # (the group whose wf1 tile wrote the body, so the reduce-scatter
+    # partials stay owner-disjoint and the body .set precedes the .add,
+    # and the spill's halo dep is in the same layer's table) ----
     if n_sp:
-        sp_remap = _remap_to_halo(dsched.spill_cols1, halo_rows)
-        sp_owner = own_row[dsched.spill_rows1.astype(np.int64)]
-        _, sp_l, sp_order, dst = _pack_by_group(sp_owner, s_n)
-        spill_rows = np.full(s_n * sp_l, n_j, np.int32)
-        spill_cols = np.zeros(s_n * sp_l, np.int32)
-        spill_vals = np.zeros(s_n * sp_l, np.float32)
+        if n_depth > 1:
+            sp_remap = np.zeros(n_sp, dtype=np.int32)
+            for z in range(n_depth):
+                m = sp_grp % n_depth == z
+                if m.any():
+                    sp_remap[m] = _remap_to_halo(
+                        dsched.spill_cols1[m], halo_layers_list[z])
+        else:
+            sp_remap = _remap_to_halo(dsched.spill_cols1,
+                                      halo_layers_list[0])
+        _, sp_l, sp_order, dst = _pack_by_group(sp_grp, n_groups)
+        spill_rows = np.full(n_groups * sp_l, n_j, np.int32)
+        spill_cols = np.zeros(n_groups * sp_l, np.int32)
+        spill_vals = np.zeros(n_groups * sp_l, np.float32)
         spill_rows[dst] = dsched.spill_rows1[sp_order]
         spill_cols[dst] = sp_remap[sp_order]
         spill_vals[dst] = dsched.spill_vals1[sp_order]
-        out_spill = np.full(s_n * sp_l, r_per, np.int32)
+        out_spill = np.full(n_groups * sp_l, r_per, np.int32)
         out_spill[dst] = (pos_of_row[dsched.spill_rows1[sp_order].astype(
-            np.int64)] - sp_owner[sp_order] * r_per).astype(np.int32)
+            np.int64)] - (sp_grp[sp_order] // n_depth) * r_per).astype(
+            np.int32)
     else:
         sp_l = 0
         spill_rows = np.zeros(0, np.int32)
@@ -380,13 +508,35 @@ def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
         spill_vals = np.zeros(0, np.float32)
         out_spill = np.zeros(0, np.int32)
 
+    # wf1 position indices composed through each group's layer slot map
+    # (the overlap executor's direct-from-gather read)
+    if t1s:
+        layer1 = (np.repeat(np.arange(n_groups, dtype=np.int64), t1s)
+                  % n_depth)
+        cols1_ov = slot_of[layer1[:, None, None],
+                           cols1.astype(np.int64)].astype(np.int32)
+    else:
+        cols1_ov = cols1
+    if sp_l:
+        layer_sp = (np.repeat(np.arange(n_groups, dtype=np.int64), sp_l)
+                    % n_depth)
+        spill_cols_ov = slot_of[layer_sp,
+                                spill_cols.astype(np.int64)].astype(np.int32)
+    else:
+        spill_cols_ov = spill_cols
+
+    wf0_bytes = float(costs0.sum()) * dtype_bytes
     comm = cost_model.shard_comm_model(s_n, h, dsched.n_i, c_col,
                                        n_j=n_j, n_repl=n_repl,
                                        combine_rows=s_n * r_per,
-                                       dtype_bytes=dtype_bytes)
+                                       dtype_bytes=dtype_bytes,
+                                       n_depth=n_depth, overlap=overlap,
+                                       wf0_bytes=wf0_bytes)
     mode = comm["combine"] if combine == "auto" else combine
+    overlap_on = bool(comm["overlap"]) and h > 0
     return ShardedSchedule(
         n_shards=s_n, n_repl=n_repl, combine=mode,
+        n_depth=n_depth, overlap=overlap_on,
         t_pad=t, n_i=dsched.n_i, n_j=n_j, n_tiles0=n_t,
         tiles_per_shard=t0s, tile_bounds=tile_bounds, tile_map=tile_map,
         row_map=row_map,
@@ -395,8 +545,9 @@ def build_sharded_schedule(a: CSR, sched: Schedule, dsched: DeviceSchedule,
         ell_vals1=vals1,
         spill_per_shard=sp_l, spill_rows1=spill_rows,
         spill_cols1=spill_cols, spill_vals1=spill_vals,
-        halo_rows=halo_rows, send_per_shard=hs,
+        halo_rows=halo_rows, halo_pad=h_pad, send_per_shard=hs,
         send_local=send_local.reshape(-1), send_pos=send_pos,
+        ell_cols1_ov=cols1_ov, spill_cols1_ov=spill_cols_ov,
         rows_per_shard=r_per, out_perm=pos_of_row,
         out_rows0=out_rows0, out_rows1=out_rows1, out_spill=out_spill,
         comm_model=comm,
@@ -427,21 +578,28 @@ def _shard_executor(shard: ShardedSchedule, mesh, kind: str):
 
     from ...models.sharding import mesh_row_repl_axes, shard_map
 
-    row_axes, repl_axes = mesh_row_repl_axes(mesh, shard.layout)
+    row_axes, repl_axes, depth_axes = mesh_row_repl_axes(mesh, shard.layout)
     mesh_sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
     if (int(np.prod([mesh_sizes[ax] for ax in row_axes])) != shard.n_shards
             or int(np.prod([mesh_sizes[ax] for ax in repl_axes] or [1]))
-            != shard.n_repl):
+            != shard.n_repl
+            or int(np.prod([mesh_sizes[ax] for ax in depth_axes] or [1]))
+            != shard.n_depth):
         raise ValueError(
             f"mesh shape {dict(mesh_sizes)} does not match the schedule's "
-            f"{shard.n_shards}x{shard.n_repl} ({shard.layout}) partition")
+            f"{shard.n_shards}x{shard.n_repl}x{shard.n_depth} "
+            f"({shard.layout}) partition")
     sh = P(row_axes)        # leading dim carries the row-shard axis
+    # wavefront-1 stacks carry the S*Z group dimension: row axes are the
+    # slow index, depth axes the fast one (group g = shard * Z + layer)
+    sh1 = P(tuple(row_axes) + tuple(depth_axes)) if depth_axes else sh
     rep = P(None, repl_axes) if repl_axes else P()       # column replicas
     sh_col = P(row_axes, repl_axes) if repl_axes else P(row_axes)
     reduce_scatter = shard.combine == "reduce_scatter"
+    overlap = bool(shard.overlap)
     t, t0s = shard.t_pad, shard.tiles_per_shard
     t1s, sp_l = shard.wf1_per_shard, shard.spill_per_shard
-    n_j, h = shard.n_j, shard.halo_size
+    n_j, h, hp = shard.n_j, shard.halo_size, shard.halo_pad
     r_per = shard.rows_per_shard
     # local output-buffer height and scatter targets per combine mode: the
     # psum arm scatters global D rows into a full (n_j, cc) partial and
@@ -454,65 +612,131 @@ def _shard_executor(shard: ShardedSchedule, mesh, kind: str):
     # index arrays are dtype-independent: convert (and upload) once at
     # build time, not per call — only the value arrays depend on the
     # operands' dtype and get their own tiny per-dtype memo below
-    send_pos = jnp.asarray(shard.send_pos)           # replicated constant
+    send_pos = jnp.asarray(shard.send_pos)   # (Z, S, Hs) replicated const
+    # the overlap executor reads the raw all-gather output through
+    # build-time composed slot indices (no halo-table materialization),
+    # so its wf1/spill index stacks are the _ov variants
+    async_halo = overlap and h > 0
+    cols1_np = shard.ell_cols1_ov if async_halo else shard.ell_cols1
+    scols_np = shard.spill_cols1_ov if async_halo else shard.spill_cols1
     idx_args = (jnp.asarray(rows0_np), jnp.asarray(shard.ell_cols0),
-                jnp.asarray(rows1_np), jnp.asarray(shard.ell_cols1),
-                jnp.asarray(srows_np),
-                jnp.asarray(shard.spill_cols1),
+                jnp.asarray(rows1_np), jnp.asarray(cols1_np),
+                jnp.asarray(srows_np), jnp.asarray(scols_np),
                 jnp.asarray(shard.send_local))
     vals_by_dtype: dict = {}
 
-    def wf1_and_combine(d, d1_local, rows1_s, cols1_s, vals1_s,
-                        srows_s, scols_s, svals_s, send_local_s):
-        """Halo all-gather (row axis only) + this shard's wavefront-1
-        share, then the combine: psum over the row axis, or — when the
-        partials are owner-disjoint — emit the shard's own block."""
-        c_col = d.shape[1]
-        if h:
-            contrib = d1_local[send_local_s]              # (Hs, c_col)
-            gathered = jax.lax.all_gather(contrib, row_axes)
-            halo = jnp.zeros((h, c_col), d.dtype).at[
-                send_pos.reshape(-1)].set(
-                gathered.reshape(-1, c_col), mode="drop")
-            if t1s:
-                rows1 = fused_ops._ell_rows(cols1_s, vals1_s, halo)
-                d = d.at[rows1_s.reshape(-1)].set(
-                    rows1.reshape(-1, c_col), mode="drop")
-            if sp_l:
-                d = d.at[srows_s].add(
-                    svals_s.astype(d.dtype)[:, None] * halo[scols_s])
-        if reduce_scatter:
+    def _depth_index():
+        """This device's depth-layer index (C-order over the depth axes —
+        the same folding ``resolve_mesh_layout`` applied)."""
+        idx = None
+        for ax in depth_axes:
+            i = jax.lax.axis_index(ax)
+            idx = i if idx is None else idx * mesh_sizes[ax] + i
+        return idx
+
+    def _layer_pos():
+        """The scatter positions of this device's depth layer's halo
+        table, flattened over the row axis: (S*Hs,)."""
+        if not depth_axes:
+            return send_pos[0].reshape(-1)
+        zi = _depth_index()
+        return jax.lax.dynamic_index_in_dim(
+            send_pos, zi, keepdims=False).reshape(-1)
+
+    def _halo_table(contrib, dtype):
+        """Leaf stage of the staged exchange (synchronous arm): all-gather
+        this fiber's send rows over the row axis and scatter them into the
+        layer's table at the schedule's positions."""
+        cc = contrib.shape[-1]
+        gathered = jax.lax.all_gather(contrib, row_axes)   # (S, Hs, cc)
+        flat = gathered.reshape(-1, cc)
+        base = jnp.zeros((hp, cc), dtype)
+        return base.at[_layer_pos()].set(flat, mode="drop")
+
+    def _mask_wf0(d):
+        """Only depth layer 0 emits the (replicated) wavefront-0 rows —
+        the depth combine would otherwise multiply them by Z."""
+        if not depth_axes:
             return d
-        return jax.lax.psum(d, row_axes)
+        return jnp.where(_depth_index() == 0, d, jnp.zeros_like(d))
+
+    def _combine(d):
+        """Root stage: psum partials over the depth axes, then the output
+        combine — psum over the row axis, or (owner-disjoint partials)
+        emit the shard's own block."""
+        if reduce_scatter:
+            if depth_axes:
+                d = jax.lax.psum(d, tuple(depth_axes))
+            return d
+        return jax.lax.psum(d, tuple(row_axes) + tuple(depth_axes))
+
+    def wf1_apply(d, halo, rows1_s, cols1_s, vals1_s,
+                  srows_s, scols_s, svals_s):
+        """This group's wavefront-1 share off an assembled halo table."""
+        c_col = d.shape[1]
+        if t1s:
+            rows1 = fused_ops._ell_rows(cols1_s, vals1_s, halo)
+            d = d.at[rows1_s.reshape(-1)].set(
+                rows1.reshape(-1, c_col), mode="drop")
+        if sp_l:
+            d = d.at[srows_s].add(
+                svals_s.astype(d.dtype)[:, None] * halo[scols_s])
+        return d
+
+    def _finish_body(d1_flat, c, halo, rows0_s, cols0_s, vals0_s, rows1_s,
+                     cols1_s, vals1_s, srows_s, scols_s, svals_s,
+                     send_local_s):
+        """wf0 scatter (+ sync halo when no prologue ran), wf1, combine."""
+        c_col = c.shape[1]
+        d1_t = d1_flat.reshape(t0s, t, c_col)
+        rows0 = jax.vmap(fused_ops._ell_rows)(cols0_s, vals0_s, d1_t)
+        d = jnp.zeros((out_n, c_col), c.dtype).at[
+            rows0_s.reshape(-1)].set(rows0.reshape(-1, c_col),
+                                     mode="drop")
+        d = _mask_wf0(d)
+        if h and halo is None:
+            halo = _halo_table(d1_flat[send_local_s], c.dtype)
+        if h:
+            d = wf1_apply(d, halo, rows1_s, cols1_s, vals1_s,
+                          srows_s, scols_s, svals_s)
+        return _combine(d)
+
+    def _issue_gather(d1_flat, send_local_s):
+        """Async exchange: slice this group's send rows out of D1 and
+        issue the all-gather BEFORE the wavefront-0 scatter stage below —
+        the collective hides under the communication-free compute the
+        fusion criterion guarantees.  The raw gather output (S*Hs slots)
+        is returned as-is; wavefront 1 reads it through build-time
+        composed slot indices, so the deferred exchange never pays the
+        per-call halo-table scatter the eager path does."""
+        contrib = d1_flat[send_local_s]                    # (Hs, c_col)
+        gathered = jax.lax.all_gather(contrib, row_axes)   # (S, Hs, cc)
+        return gathered.reshape(-1, contrib.shape[-1])
 
     def per_shard_gemm(b_blk, c, rows0_s, cols0_s, vals0_s, rows1_s,
                        cols1_s, vals1_s, srows_s, scols_s, svals_s,
                        send_local_s):
-        c_col = c.shape[1]
-        d1_t = b_blk.reshape(t0s, t, -1) @ c              # (T0s, t, c_col)
-        rows0 = jax.vmap(fused_ops._ell_rows)(cols0_s, vals0_s, d1_t)
-        d = jnp.zeros((out_n, c_col), c.dtype).at[
-            rows0_s.reshape(-1)].set(rows0.reshape(-1, c_col),
-                                     mode="drop")
-        return wf1_and_combine(d, d1_t.reshape(t0s * t, c_col), rows1_s,
-                               cols1_s, vals1_s, srows_s, scols_s, svals_s,
-                               send_local_s)
+        d1_flat = b_blk @ c                                # (T0s*t, c_col)
+        halo = _issue_gather(d1_flat, send_local_s) if async_halo else None
+        out = _finish_body(d1_flat, c, halo, rows0_s, cols0_s, vals0_s,
+                           rows1_s, cols1_s, vals1_s, srows_s, scols_s,
+                           svals_s, send_local_s)
+        return (out, halo) if async_halo else out
 
     def per_shard_spmm(o_cols_s, o_vals_s, d1_spill_s, c, rows0_s,
                        cols0_s, vals0_s, rows1_s, cols1_s, vals1_s,
                        srows_s, scols_s, svals_s, send_local_s):
-        c_col = c.shape[1]
+        o_cols_flat = o_cols_s.reshape(t0s * t, -1)
+        o_vals_flat = o_vals_s.reshape(t0s * t, -1)
         # op-1 SpMM per tile: hybrid ELL body over replicated C + the
         # tile's pre-accumulated spill delta
-        d1_t = fused_ops._ell_rows(o_cols_s, o_vals_s, c) \
-            + d1_spill_s.reshape(t0s, t, c_col)
-        rows0 = jax.vmap(fused_ops._ell_rows)(cols0_s, vals0_s, d1_t)
-        d = jnp.zeros((out_n, c_col), c.dtype).at[
-            rows0_s.reshape(-1)].set(rows0.reshape(-1, c_col),
-                                     mode="drop")
-        return wf1_and_combine(d, d1_t.reshape(t0s * t, c_col), rows1_s,
-                               cols1_s, vals1_s, srows_s, scols_s, svals_s,
-                               send_local_s)
+        d1_flat = fused_ops._ell_rows(o_cols_flat, o_vals_flat, c) \
+            + d1_spill_s
+        halo = _issue_gather(d1_flat, send_local_s) if async_halo else None
+        out = _finish_body(d1_flat, c, halo, rows0_s, cols0_s, vals0_s,
+                           rows1_s, cols1_s, vals1_s, srows_s, scols_s,
+                           svals_s, send_local_s)
+        return (out, halo) if async_halo else out
 
     if kind == "gemm":
         body = per_shard_gemm
@@ -520,13 +744,23 @@ def _shard_executor(shard: ShardedSchedule, mesh, kind: str):
     else:
         body = per_shard_spmm
         lead_specs = (sh, sh, sh_col, rep)
-    # operand specs: leading op inputs, then the schedule's 10 stacked
-    # index arrays (all sharded over the row axis on dim 0)
-    in_specs = lead_specs + (sh,) * 10
+    # operand specs: leading op inputs, then the schedule's stacked index
+    # arrays — wf0 stacks shard over the row axis, wf1/spill/send stacks
+    # over the row × depth group axes
+    in_specs = lead_specs + (sh, sh, sh) + (sh1,) * 7
     out_specs = sh_col if reduce_scatter else rep
+    if async_halo:
+        # the raw gather output rides along as a second result: depth
+        # layers own their slice, column replicas their columns,
+        # replicated over the row axis (it IS an all-gather result)
+        flat_spec = P(tuple(depth_axes) or None,
+                      tuple(repl_axes) or None)
+        out_specs = (out_specs, flat_spec)
     mapped = shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs)
+                       out_specs=out_specs,
+                       check_vma=not async_halo)
     fn = jax.jit(mapped)
+    halo_bufs: dict = {}
 
     def run(*operands):
         dtype = operands[-1].dtype                  # C is the last operand
@@ -540,7 +774,17 @@ def _shard_executor(shard: ShardedSchedule, mesh, kind: str):
             idx_args
         args = operands + (rows0, cols0, vals[0], rows1_a, cols1_a,
                            vals[1], srows, scols, vals[2], send_local)
-        return fn(*args)
+        if not async_halo:
+            return fn(*args)
+        # double buffering: keep the last TWO gather outputs alive so the
+        # next call's in-flight exchange never reuses a buffer a still-
+        # running wavefront-1 consumer may be reading
+        out, flat = fn(*args)
+        bufs = halo_bufs.setdefault(dtype, [None, None, 0])
+        idle = bufs[2]
+        bufs[idle] = flat
+        bufs[2] = idle ^ 1
+        return out
 
     memo[key] = run
     return run

@@ -150,7 +150,7 @@ def main(argv=None):
 
     b = args.batch
     prompts = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab_size)
-    serve_step = jax.jit(steps.make_serve_step(cfg, rules=None))
+    serve_step = steps.make_serve_step(cfg, rules=None, jit=True)
 
     # batched prefill: one compiled call fills every layer's KV/state cache
     cache = T.init_cache(cfg, b, max_len)

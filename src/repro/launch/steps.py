@@ -23,7 +23,11 @@ def make_loss_fn(cfg, rules):
     return loss_fn
 
 
-def make_train_step(cfg, opt_cfg, rules):
+def make_train_step(cfg, opt_cfg, rules, *, jit: bool = False):
+    """Train-step factory.  ``jit=True`` returns the compiled step (the
+    ``make_gcn_train_step`` convention) so drivers stop hand-wrapping;
+    the default stays eager because the dry-run re-wraps with explicit
+    in_shardings."""
     loss_fn = make_loss_fn(cfg, rules)
 
     def train_step(params, opt_state, batch):
@@ -31,7 +35,7 @@ def make_train_step(cfg, opt_cfg, rules):
             loss_fn, has_aux=True)(params, batch)
         params, opt_state, om = adamw.update(opt_cfg, grads, opt_state, params)
         return params, opt_state, {**aux, **om}
-    return train_step
+    return jax.jit(train_step) if jit else train_step
 
 
 def make_gcn_train_step(model, *, lr: float = 0.3, fused: bool = True,
@@ -52,17 +56,17 @@ def make_gcn_train_step(model, *, lr: float = 0.3, fused: bool = True,
     return jax.jit(step) if jit else step
 
 
-def make_prefill_step(cfg, rules):
+def make_prefill_step(cfg, rules, *, jit: bool = False):
     def prefill_step(params, batch):
         return T.forward(cfg, params, batch, rules=rules)
-    return prefill_step
+    return jax.jit(prefill_step) if jit else prefill_step
 
 
-def make_serve_step(cfg, rules):
+def make_serve_step(cfg, rules, *, jit: bool = False):
     """One decode step: new token in, next-token logits + updated cache out."""
     def serve_step(params, batch, cache, cache_len):
         logits, new_cache = T.decode_step(
             cfg, params, batch, cache, cache_len, rules=rules)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, new_cache
-    return serve_step
+    return jax.jit(serve_step) if jit else serve_step

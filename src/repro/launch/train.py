@@ -70,7 +70,7 @@ def main(argv=None):
             start_step = extra["step"]
             print(f"[restore] resumed from step {start_step}", flush=True)
 
-    train_step = jax.jit(steps.make_train_step(cfg, opt_cfg, rules=None))
+    train_step = steps.make_train_step(cfg, opt_cfg, rules=None, jit=True)
 
     ema = None
     for step in range(start_step, args.steps):

@@ -35,10 +35,17 @@ class GCN:
     """Tile-fused GCN on the unified dispatch API."""
 
     def __init__(self, cfg, adj: CSR, *, p: int = 8,
-                 cache_size: float = 600_000.0, ct_size: int = 2048):
+                 cache_size: float = 600_000.0, ct_size: int = 2048,
+                 spec: api.FusionSpec | None = None):
         self.cfg = cfg
         self.adj = normalize_adjacency(adj)
-        self.p, self.cache_size, self.ct_size = p, cache_size, ct_size
+        # one FusionSpec drives every layer's inspection and dispatch; the
+        # scalar ctor knobs survive as sugar for the common case
+        self.spec = spec if spec is not None else api.FusionSpec(
+            p=p, cache_size=cache_size, ct_size=ct_size)
+        self.p = self.spec.p
+        self.cache_size = self.spec.cache_size
+        self.ct_size = self.spec.ct_size
         # warm the inspector cache for every layer shape once per graph;
         # forward() then hits it for every layer and step
         dims = ([cfg.in_dim] + [cfg.hidden_dim] * (cfg.n_layers - 1)
@@ -46,7 +53,7 @@ class GCN:
         self.dims = dims
         self.entries = [
             api.get_schedule(self.adj, b_col=dims[i], c_col=dims[i + 1],
-                             p=p, cache_size=cache_size, ct_size=ct_size)
+                             spec=self.spec)
             for i in range(cfg.n_layers)]
         self.entry = self.entries[0]   # back-compat alias (layer 0)
 
@@ -68,13 +75,15 @@ class GCN:
         """Per-layer forward+backward traffic (``cost_model
         .train_step_traffic``): the transpose entry prices the backward's
         fused product against Âᵀ, the extra SpMM term its ``Âᵀ·Ḋ``."""
+        import dataclasses
+
         from ..core.tilefusion import cost_model
         out = []
         for e in self.entries:
-            et = api.get_schedule(self.adj, b_col=e.c_col, c_col=e.b_col,
-                                  p=self.p, cache_size=self.cache_size,
-                                  ct_size=self.ct_size, transpose=True,
-                                  dtype_bytes=e.dtype_bytes)
+            et = api.get_schedule(
+                self.adj, b_col=e.c_col, c_col=e.b_col,
+                spec=dataclasses.replace(self.spec, transpose=True,
+                                         dtype_bytes=e.dtype_bytes))
             out.append(cost_model.train_step_traffic(
                 e.traffic_model, et.traffic_model, nnz=self.adj.nnz,
                 n_i=self.adj.n_cols, n_j=self.adj.n_rows, c_col=e.c_col,
@@ -99,12 +108,13 @@ class GCN:
         Differentiable end to end: under ``jax.grad`` each layer's
         backward runs the fused transposed products (api custom_vjp),
         including under a non-trivial ``mesh=``."""
+        import dataclasses
         be = backend or ("unfused" if not fused
                          else "pallas" if impl == "pallas" else "xla")
+        spec = (dataclasses.replace(self.spec, mesh=mesh)
+                if mesh is not None else self.spec)
         for i, w in enumerate(params):
-            h = api.tile_fused_matmul(self.adj, x, w, backend=be, p=self.p,
-                                      cache_size=self.cache_size,
-                                      ct_size=self.ct_size, mesh=mesh)
+            h = api.tile_fused_matmul(self.adj, x, w, backend=be, spec=spec)
             x = jax.nn.relu(h) if i < len(params) - 1 else h
         return x
 

@@ -48,28 +48,34 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
 
 
 def mesh_row_repl_axes(mesh, layout: str = "1d") -> tuple:
-    """Split a mesh's axis names into (row_axes, repl_axes) for the sharded
-    tile-fusion executors.
+    """Split a mesh's axis names into (row_axes, repl_axes, depth_axes)
+    for the sharded tile-fusion executors.
 
-    ``"1d"`` flattens every axis into the row-block dimension (repl empty —
-    the pre-2-D behavior for any mesh rank); ``"1.5d"`` keeps the leading
-    axis for row blocks and hands the trailing axes to the dense operand's
-    column replicas.  Collectives inside the executors (halo all-gather,
-    psum combine) run over ``row_axes`` only: the replica groups never
-    exchange bytes — their column slices are independent by construction.
-    The split is derived from ``scheduler.resolve_mesh_layout`` — the one
-    place the layout rule lives — so the executor's axis use can never
-    disagree with the partitioner's shard counts; a 1-D mesh has nothing
-    to replicate over, so both layouts degenerate to (all axes, ())."""
+    ``"1d"`` flattens every axis into the row-block dimension (repl and
+    depth empty — the pre-2-D behavior for any mesh rank); ``"1.5d"``
+    keeps the leading axis for row blocks and hands the trailing axes to
+    the dense operand's column replicas; ``"2.5d"`` additionally peels the
+    axes past the second into a depth dimension that replicates the
+    wavefront-0 compute and splits wavefront-1 halo work.  Halo
+    all-gathers run over ``row_axes`` only; depth layers combine their
+    partial outputs with a psum over ``depth_axes``; the column-replica
+    groups never exchange bytes — their column slices are independent by
+    construction.  The split is derived from
+    ``scheduler.resolve_mesh_layout`` — the one place the layout rule
+    lives — so the executor's axis use can never disagree with the
+    partitioner's shard counts; a 1-D mesh has nothing to replicate over,
+    so every layout degenerates to (all axes, (), ())."""
     import numpy as np
 
     from ..core.tilefusion.scheduler import resolve_mesh_layout
 
     names = tuple(str(n) for n in mesh.axis_names)
-    _, n_repl = resolve_mesh_layout(np.shape(mesh.devices), layout)
+    _, n_repl, n_depth = resolve_mesh_layout(np.shape(mesh.devices), layout)
+    if n_depth > 1:
+        return names[:1], names[1:2], names[2:]
     if n_repl > 1:
-        return names[:1], names[1:]
-    return names, ()
+        return names[:1], names[1:], ()
+    return names, (), ()
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,8 +16,14 @@ leaves VMEM), the carried state is the single wavefront-1-style dependency.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from ..core.sparse.formats import CSR
+from ..core.tilefusion import api as tf_api
 
 
 def chunked_linear_recurrence(q, k, v, log_a, *, chunk: int = 128,
@@ -96,6 +102,69 @@ def linear_recurrence_step(q, k, v, log_a, hstate, *, normalize: bool = True):
     if normalize:
         o = o[..., :dv] / jnp.maximum(jnp.abs(o[..., dv]), 1.0)[..., None]
     return o.astype(q.dtype), h_new
+
+
+# ----------------------------------------------------- banded-decay mixer --
+@functools.lru_cache(maxsize=8)
+def decay_band_csr(seq: int, window: int, decay: float = 0.9) -> CSR:
+    """The fixed-decay linear recurrence unrolled on the time axis:
+    ``A[i, j] = (1 - decay) * decay**(i - j)`` for
+    ``max(0, i - window + 1) <= j <= i`` — a lower-triangular banded
+    operator whose SpMM against values IS the windowed recurrence
+    ``o_i = (1-a) Σ_j a^{i-j} v_j``.  The ``(1 - decay)`` scale bounds every
+    row sum below 1, so the mixer needs no separate normalizer column.
+
+    Returned as host-side CSR so it routes through the tile-fusion
+    inspector like any other sparse operand (memoized: the content-keyed
+    schedule cache then hits on every layer and step)."""
+    if not (0.0 < decay < 1.0):
+        raise ValueError(f"decay must be in (0, 1), got {decay}")
+    w = max(1, min(int(window), seq))
+    counts = np.minimum(np.arange(seq) + 1, w)
+    indptr = np.zeros(seq + 1, np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    indices = np.concatenate(
+        [np.arange(i - c + 1, i + 1) for i, c in enumerate(counts)]
+    ).astype(np.int32)
+    rows = np.repeat(np.arange(seq), counts)
+    data = ((1.0 - decay) * decay ** (rows - indices)).astype(np.float32)
+    return CSR(seq, seq, indptr, indices, data)
+
+
+# one spec drives every band-mixer dispatch; small ``p`` because the band
+# is narrow and perfectly local (wavefront 0 swallows almost every tile)
+_BAND_SPEC = tf_api.FusionSpec(p=4, cache_size=600_000.0, ct_size=256)
+
+
+def band_mix_init(key, cfg, dtype):
+    """Banded-decay token mixer (``sparse-band`` block pattern): value and
+    gate projections plus the down projection."""
+    d = cfg.d_model
+    inner = cfg.n_heads * cfg.ssm_head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        "wv": _init(ks[0], (d, inner), dtype=dtype),
+        "wz": _init(ks[1], (d, inner), dtype=dtype),
+        "w_down": _init(ks[2], (inner, d), dtype=dtype),
+    }
+
+
+def band_mix_apply(p, cfg, x, a, *, backend: str = "xla", spec=None):
+    """x: (B,S,d) -> (B,S,d); ``a = decay_band_csr(S, ...)``.
+
+    The mix is ``A @ (X Wv)`` — the paper's GeMM-SpMM with the band as the
+    sparse operand — routed through ``tile_fused_matmul`` per batch
+    element, so the schedule comes from the content-keyed cache and the
+    backward runs the fused transposed products (custom_vjp), the same
+    differentiable seam the GCN trains through."""
+    spec = _BAND_SPEC if spec is None else spec
+    wv = p["wv"].astype(jnp.float32)
+    mixed = jnp.stack([
+        tf_api.tile_fused_matmul(a, x[i].astype(jnp.float32), wv,
+                                 backend=backend, spec=spec)
+        for i in range(x.shape[0])])
+    z = x @ p["wz"]
+    return (mixed.astype(x.dtype) * jax.nn.silu(z)) @ p["w_down"]
 
 
 # ------------------------------------------------------------------ blocks --

@@ -7,6 +7,9 @@ selected by ``cfg.block_pattern``:
   attn          — self-attention + FFN/MoE          (dense, moe, vlm, enc-dec)
   mlstm7+slstm  — xLSTM groups: 7 mLSTM + 1 sLSTM   (xlstm-1.3b)
   attn+mamba    — parallel attention & mamba heads  (hymba-1.5b)
+  sparse-band   — banded-decay SpMM token mixer on the tile-fusion seam
+                  (train/prefill; ``ssm.band_mix_apply`` routes the mix
+                  through ``tile_fused_matmul``'s custom_vjp)
 """
 from __future__ import annotations
 
@@ -58,6 +61,16 @@ def _attn_block_init(key, cfg, dtype, cross: bool = False):
     return p
 
 
+def _sparse_block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mix": S.band_mix_init(ks[0], cfg, dtype),
+        "ffn": L.ffn_init(ks[1], cfg, dtype),
+    }
+
+
 def _hybrid_block_init(key, cfg, dtype):
     ks = jax.random.split(key, 4)
     return {
@@ -96,6 +109,9 @@ def init_params(cfg, key):
     elif cfg.block_pattern == "attn+mamba":
         params["layers"] = _stack_init(
             _hybrid_block_init, ks[1], cfg.n_layers, cfg, dtype)
+    elif cfg.block_pattern == "sparse-band":
+        params["layers"] = _stack_init(
+            _sparse_block_init, ks[1], cfg.n_layers, cfg, dtype)
     else:
         cross = cfg.encoder_layers > 0
         params["layers"] = _stack_init(
@@ -141,6 +157,19 @@ def _attn_block(cfg, rules, pos, enc_out, x, lp,
     if rules is not None:
         x = shard(x, rules.act_btd)
     return x, new_cache
+
+
+def _sparse_band_block(cfg, rules, a_band, x, lp):
+    """Token mixer = banded-decay SpMM through the fused seam.  No decode
+    cache: the band operator needs the full (pre-)fill window, so this
+    pattern serves training and prefill shapes only."""
+    h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    x = x + S.band_mix_apply(lp["mix"], cfg, h, a_band)
+    h = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    x = x + L.ffn_apply(lp["ffn"], cfg, h, rules)
+    if rules is not None:
+        x = shard(x, rules.act_btd)
+    return x
 
 
 def _hybrid_block(cfg, rules, pos, x, lp, cache=None, cache_len=None):
@@ -219,6 +248,13 @@ def forward(cfg, params, batch, *, rules: Optional[ShardingRules] = None):
             return y, None
         fb = _maybe_remat(cfg, f)
         x, _ = jax.lax.scan(fb, x, params["layers"], unroll=_unroll(cfg))
+    elif cfg.block_pattern == "sparse-band":
+        a_band = S.decay_band_csr(x.shape[1], cfg.band_window, cfg.band_decay)
+
+        def f(c, lp):
+            return _sparse_band_block(cfg, rules, a_band, c, lp), None
+        fb = _maybe_remat(cfg, f)
+        x, _ = jax.lax.scan(fb, x, params["layers"], unroll=_unroll(cfg))
     else:
         def f(c, lp):
             y, _ = _attn_block(cfg, rules, pos, enc_out, c, lp)
@@ -237,6 +273,9 @@ def forward(cfg, params, batch, *, rules: Optional[ShardingRules] = None):
 def init_cache(cfg, batch_size: int, max_len: int):
     """KV/state caches, leading layer axis, ready for lax.scan."""
     dtype = _dtype(cfg)
+    if cfg.block_pattern == "sparse-band":
+        raise NotImplementedError(
+            "sparse-band blocks have no decode cache; serve via forward()")
     lcount = cfg.n_layers
     c = min(max_len, cfg.window) if cfg.window > 0 else max_len
     hkv, dh = cfg.n_kv_heads, cfg.head_dim
@@ -274,6 +313,9 @@ def decode_step(cfg, params, batch, cache, cache_len,
     cache_len: scalar int32 — tokens already in the cache.
     Returns (logits (B,S,V), new_cache).
     """
+    if cfg.block_pattern == "sparse-band":
+        raise NotImplementedError(
+            "sparse-band blocks have no decode cache; serve via forward()")
     x = _embed_inputs(cfg, params, batch, rules)
     s = x.shape[1]
     pos = cache_len + jnp.arange(s, dtype=jnp.int32)

@@ -1,4 +1,7 @@
 """Unified dispatch API: inspector cache, backend overrides, cost model."""
+import dataclasses
+import warnings
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -253,3 +256,73 @@ def test_invalid_backend_rejected():
     with pytest.raises(ValueError):
         api.tile_fused_matmul(a, jnp.ones((64, 4)), jnp.ones((4, 4)),
                               backend="mkl")
+
+
+# ---------------------------------------------------------------------------
+# FusionSpec consolidation: spec= is the cache key, legacy kwargs are a shim
+# ---------------------------------------------------------------------------
+
+def test_spec_and_legacy_kwargs_cut_the_same_cache_key():
+    """Acceptance: a FusionSpec and the equivalent legacy keywords resolve
+    to the SAME schedule-cache entry — the spec really is the key, not a
+    parallel surface that could drift."""
+    a = banded_spd(256, 4, seed=20)
+    spec = api.FusionSpec(p=2, cache_size=30_000.0, ct_size=32)
+    e_spec = api.get_schedule(a, b_col=8, c_col=8, spec=spec)
+    assert api.schedule_cache_stats()["misses"] == 1
+    with pytest.warns(DeprecationWarning):
+        e_legacy = api.get_schedule(a, b_col=8, c_col=8, p=2,
+                                    cache_size=30_000.0, ct_size=32)
+    assert e_legacy is e_spec             # pure hit, no rebuild
+    stats = api.schedule_cache_stats()
+    assert (stats["hits"], stats["misses"]) == (1, 1)
+    assert stats["spec_entries"] == 1
+    # a field change is a different resolved spec and a fresh entry
+    e2 = api.get_schedule(a, b_col=8, c_col=8,
+                          spec=dataclasses.replace(spec, ct_size=64))
+    assert e2 is not e_spec
+    assert api.schedule_cache_stats()["spec_entries"] == 2
+
+
+def test_legacy_kwargs_warn_once_per_process():
+    """The deprecation shim is structured (DeprecationWarning) and fires
+    exactly once per process; clear_schedule_cache re-arms it so tests
+    stay order-independent."""
+    a = banded_spd(128, 4, seed=21)
+    with pytest.warns(DeprecationWarning, match="FusionSpec"):
+        api.get_schedule(a, b_col=8, c_col=8, p=2)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        api.get_schedule(a, b_col=8, c_col=8, p=4)   # second call: silent
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+    api.clear_schedule_cache()                       # re-arms the warning
+    with pytest.warns(DeprecationWarning):
+        api.get_schedule(a, b_col=8, c_col=8, p=2)
+
+
+def test_mixing_spec_and_legacy_kwargs_rejected():
+    a = banded_spd(64, 2, seed=22)
+    with pytest.raises(TypeError, match="both spec="):
+        api.get_schedule(a, b_col=4, c_col=4,
+                         spec=api.FusionSpec(), ct_size=32)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        api.get_schedule(a, b_col=4, c_col=4, ct_sizee=32)  # typo knob
+    with pytest.raises(TypeError, match="FusionSpec"):
+        api.get_schedule(a, b_col=4, c_col=4, spec={"p": 2})
+
+
+def test_spec_validates_overlap_and_n_repl():
+    with pytest.raises(ValueError, match="overlap"):
+        api.FusionSpec(overlap="yes")
+    with pytest.raises(ValueError, match="n_repl"):
+        api.FusionSpec(n_repl=0)
+    # inert distribution knobs collapse on a trivial mesh: mesh=None specs
+    # share one entry regardless of overlap/n_repl values
+    a = banded_spd(128, 4, seed=23)
+    e1 = api.get_schedule(a, b_col=8, c_col=8,
+                          spec=api.FusionSpec(overlap=True, n_repl=2))
+    e2 = api.get_schedule(a, b_col=8, c_col=8,
+                          spec=api.FusionSpec(overlap=False, n_repl=None))
+    assert e2 is e1
+    assert api.schedule_cache_stats()["spec_entries"] == 1

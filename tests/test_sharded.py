@@ -68,24 +68,33 @@ def test_balanced_partition_empty():
 
 
 def test_mesh_partition_resolves_layouts():
-    """The 2-D-aware front end: one layout rule decides row shards vs
-    column replicas, and the row bounds follow it."""
+    """The mesh-aware front end: one layout rule decides row shards vs
+    column replicas vs depth layers, and the row bounds follow it."""
     from repro.core.tilefusion.scheduler import (balanced_mesh_partition,
                                                  resolve_mesh_layout)
     costs = np.ones(8)
     # 1d flattens every axis into row shards
-    bounds, n_row, n_repl = balanced_mesh_partition(costs, (4, 2), "1d")
-    assert (n_row, n_repl) == (8, 1) and bounds.shape == (9,)
+    bounds, n_row, n_repl, n_depth = balanced_mesh_partition(
+        costs, (4, 2), "1d")
+    assert (n_row, n_repl, n_depth) == (8, 1, 1) and bounds.shape == (9,)
     # 1.5d partitions over the leading axis only
-    bounds, n_row, n_repl = balanced_mesh_partition(costs, (4, 2), "1.5d")
-    assert (n_row, n_repl) == (4, 2) and bounds.shape == (5,)
+    bounds, n_row, n_repl, n_depth = balanced_mesh_partition(
+        costs, (4, 2), "1.5d")
+    assert (n_row, n_repl, n_depth) == (4, 2, 1) and bounds.shape == (5,)
     assert np.diff(bounds).sum() == 8
-    # degenerate cases resolve to pure 1-D; bad layouts fail loudly
-    assert resolve_mesh_layout((8,), "1.5d") == (8, 1)
-    assert resolve_mesh_layout(8, "1d") == (8, 1)
-    assert resolve_mesh_layout((4, 1), "1.5d") == (4, 1)
+    # 2.5d peels the axes past the second into depth layers
+    assert resolve_mesh_layout((2, 2, 2), "2.5d") == (2, 2, 2)
+    assert resolve_mesh_layout((2, 2, 2, 2), "2.5d") == (2, 2, 4)
+    # nothing to column-replicate: depth folds into the replica slot
+    assert resolve_mesh_layout((4, 1, 2), "2.5d") == (4, 2, 1)
+    # degenerate cases walk down the ladder; bad layouts fail loudly
+    assert resolve_mesh_layout((8,), "1.5d") == (8, 1, 1)
+    assert resolve_mesh_layout(8, "1d") == (8, 1, 1)
+    assert resolve_mesh_layout((4, 1), "1.5d") == (4, 1, 1)
+    assert resolve_mesh_layout((4, 2), "2.5d") == (4, 2, 1)
+    assert resolve_mesh_layout((8,), "2.5d") == (8, 1, 1)
     with pytest.raises(ValueError):
-        resolve_mesh_layout((4, 2), "2.5d")
+        resolve_mesh_layout((4, 2), "3d")
 
 
 def test_shard_comm_model_prices_halo_vs_replication():
@@ -179,7 +188,7 @@ def test_sharded_schedule_structure():
     np.testing.assert_array_equal(pos_seen, np.arange(shard.halo_size))
     for s in range(4):
         sl = shard.send_local.reshape(4, -1)[s]
-        sp = shard.send_pos[s]
+        sp = shard.send_pos[0, s]           # (Z, S, Hs); Z == 1 here
         real = sp < shard.halo_size
         # each contributed halo row is inside the shard's own row block
         glob = sl[real] + row_bounds[s]
@@ -384,6 +393,38 @@ assert e15.shard.n_shards == 4 and e15.shard.n_repl == 2
 assert e15.shard.layout == "1.5d"
 stats = api.schedule_cache_stats()
 assert stats["layout_15d"] >= 1 and stats["layout_1d"] >= 1, stats
+
+# 4) 2.5D cell: a real 2x2x2 cube, depth-2 staged halo exchange, sync and
+# async overlap both matching the oracle and each other exactly
+import dataclasses
+mesh3d = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("x", "y", "z"))
+spec = api.FusionSpec(mesh=mesh3d, shard_layout="2.5d", overlap=False,
+                      **knobs)
+e25 = api.get_schedule(a, b_col=8, c_col=8, spec=spec)
+assert e25.shard.n_shards == 2 and e25.shard.n_repl == 2
+assert e25.shard.n_depth == 2 and e25.shard.layout == "2.5d"
+pair = {}
+for ov in (False, True):
+    s = dataclasses.replace(spec, overlap=ov)
+    got = api.tile_fused_matmul(a, jnp.asarray(b, jnp.float32),
+                                jnp.asarray(cg, jnp.float32),
+                                backend="sharded", spec=s)
+    np.testing.assert_allclose(np.asarray(got), want_g, rtol=2e-3,
+                               atol=2e-3, err_msg=f"2.5d/ov={ov}")
+    pair[ov] = np.asarray(got)
+    got_s = api.tile_fused_matmul(a, a, jnp.asarray(cs, jnp.float32),
+                                  backend="sharded", spec=s)
+    np.testing.assert_allclose(np.asarray(got_s),
+                               fused_ref.unfused_spmm_spmm(a, a, cs),
+                               rtol=2e-3, atol=2e-3,
+                               err_msg=f"2.5d-spmm/ov={ov}")
+np.testing.assert_allclose(pair[True], pair[False], rtol=1e-6, atol=1e-6)
+e_on = api.get_schedule(a, b_col=8, c_col=8,
+                        spec=dataclasses.replace(spec, overlap=True))
+assert e_on.shard.overlap and e_on.shard.n_depth == 2
+stats = api.schedule_cache_stats()
+assert stats["layout_25d"] >= 1, stats
+assert stats["spec_entries"] >= 1, stats
 print("FORCED8 OK")
 """
 

@@ -15,13 +15,19 @@ otherwise — either way every environment draws the same cases):
               from the CSR (the ``wf1_dep_rows`` contract re-derived
               independently).
   parity      sharded execution over every mesh shape this platform can
-              express (all-device 1-D; 2-D splits when ≥4 devices) ×
-              {psum, reduce_scatter} × {1d, 1.5d, auto} × dtypes equals
-              the single-device ``fused_ref`` oracle.  On a 1-device run
-              this exercises the trivial-mesh fallback; the CI
-              multi-device leg (``--xla_force_host_platform_device_count=8``)
-              runs the real 8-way partitions.
+              express (all-device 1-D; 2-D splits when ≥4 devices; the
+              2×2×2 cube when ≥8) × {psum, reduce_scatter} ×
+              {1d, 1.5d, 2.5d, auto} × {sync, overlap} × dtypes equals
+              the single-device ``fused_ref`` oracle, and the async
+              halo-overlap path equals the synchronous path on the SAME
+              partition (tight tolerance — overlap re-routes the exchange,
+              it must not change the math).  On a 1-device run this
+              exercises the trivial-mesh fallback; the CI multi-device leg
+              (``--xla_force_host_platform_device_count=8``) runs the
+              real 8-way partitions.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,7 +40,7 @@ from repro.core.sparse.random import (banded_spd, block_diag_noise,
                                       hub_powerlaw, powerlaw_graph)
 from repro.core.tilefusion import api, fused_ref, sharded
 
-KNOBS = dict(p=2, cache_size=30_000.0, ct_size=32)
+SPEC = api.FusionSpec(p=2, cache_size=30_000.0, ct_size=32)
 
 
 def _empty_rows(n: int, seed: int) -> CSR:
@@ -52,12 +58,14 @@ PATTERNS = {
 }
 
 #: Mesh shapes this platform can express: the flattened 1-D mesh always,
-#: 2-D factorizations when the (possibly CI-forced) device count allows.
+#: 2-D factorizations when the (possibly CI-forced) device count allows,
+#: and the 2×2×2 cube (the 2.5D depth rung) on an 8-device leg.
 MESH_SHAPES = [(len(jax.devices()),)]
 if len(jax.devices()) >= 4:
     MESH_SHAPES.append((len(jax.devices()) // 2, 2))
 if len(jax.devices()) >= 8:
     MESH_SHAPES.append((2, 4))
+    MESH_SHAPES.append((2, 2, 2))
 
 #: Per-dtype tolerances: bf16's 8-bit mantissa accumulates ~0.4% per term
 #: over ~100-term hub rows — loose bounds still catch structural parity
@@ -68,13 +76,14 @@ _TOL = {"float32": 2e-3, "bfloat16": 1.5e-1}
 def _mesh(shape) -> Mesh:
     n = int(np.prod(shape))
     devs = np.array(jax.devices()[:n]).reshape(shape)
-    return Mesh(devs, ("x", "y")[: len(shape)])
+    return Mesh(devs, ("x", "y", "z")[: len(shape)])
 
 
 def _build(pattern: str, n: int, seed: int, n_shards: int, n_repl: int,
            spmm: bool):
     a = PATTERNS[pattern](n, seed)
-    entry = api.get_schedule(a, b_col=8, c_col=8, b_is_sparse=spmm, **KNOBS)
+    entry = api.get_schedule(a, b_col=8, c_col=8, b_is_sparse=spmm,
+                             spec=SPEC)
     shard = sharded.build_sharded_schedule(
         a, entry.sched, entry.dsched, (n_shards, n_repl), b_col=8, c_col=8,
         b_is_sparse=spmm, width_cap=entry.width_cap,
@@ -193,29 +202,66 @@ def test_halo_equals_bruteforce_deps(pattern, n, seed, n_shards, spmm):
 @given(pattern=st.sampled_from(sorted(PATTERNS)), seed=st.integers(0, 3),
        mesh_shape=st.sampled_from(MESH_SHAPES),
        combine=st.sampled_from(["auto", "psum", "reduce_scatter"]),
-       layout=st.sampled_from(["auto", "1d", "1.5d"]),
+       layout=st.sampled_from(["auto", "1d", "1.5d", "2.5d"]),
+       overlap=st.booleans(),
        dtype=st.sampled_from(sorted(_TOL)))
 def test_sharded_parity_vs_oracle(op_pair, pattern, seed, mesh_shape,
-                                  combine, layout, dtype):
+                                  combine, layout, overlap, dtype):
     a = PATTERNS[pattern](64, seed)
     rng = np.random.default_rng(7000 + 17 * seed)
     mesh = _mesh(mesh_shape)
     jdt = jnp.dtype(dtype)
     tol = _TOL[dtype]
-    kwargs = dict(KNOBS, mesh=mesh, shard_combine=combine,
-                  shard_layout=layout, backend="sharded")
+    spec = dataclasses.replace(SPEC, mesh=mesh, shard_combine=combine,
+                               shard_layout=layout, overlap=overlap)
     if op_pair == "spmm":
         c = jnp.asarray(rng.standard_normal((64, 8)), jdt)
-        got = api.tile_fused_matmul(a, a, c, **kwargs)
+        got = api.tile_fused_matmul(a, a, c, backend="sharded", spec=spec)
         want = fused_ref.unfused_spmm_spmm(
             a, a, np.asarray(c, np.float64))
     else:
         b = jnp.asarray(rng.standard_normal((64, 8)), jdt)
         c = jnp.asarray(rng.standard_normal((8, 8)), jdt)
-        got = api.tile_fused_matmul(a, b, c, **kwargs)
+        got = api.tile_fused_matmul(a, b, c, backend="sharded", spec=spec)
         want = fused_ref.unfused_gemm_spmm(
             a, np.asarray(b, np.float64), np.asarray(c, np.float64))
     np.testing.assert_allclose(
         np.asarray(got, np.float64), want, rtol=tol, atol=tol,
         err_msg=f"{op_pair}/{pattern}/seed{seed}/{mesh_shape}/"
-                f"{combine}/{layout}/{dtype}")
+                f"{combine}/{layout}/ov{int(overlap)}/{dtype}")
+
+
+# --------------------------------------------------------------------------
+# Overlap ≡ sync: the async exchange re-routes the halo, not the math
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("op_pair", ["gemm", "spmm"])
+@settings(max_examples=8, deadline=None)
+@given(pattern=st.sampled_from(sorted(PATTERNS)), seed=st.integers(0, 3),
+       mesh_shape=st.sampled_from(MESH_SHAPES),
+       combine=st.sampled_from(["auto", "psum", "reduce_scatter"]),
+       layout=st.sampled_from(["auto", "1d", "1.5d", "2.5d"]))
+def test_overlap_equals_sync(op_pair, pattern, seed, mesh_shape, combine,
+                             layout):
+    """Same partition, halo exchange issued async vs eagerly: outputs must
+    agree to float32 roundoff — overlap changes WHEN the collective runs
+    and how wf1 indexes its result, never the values exchanged."""
+    a = PATTERNS[pattern](64, seed)
+    rng = np.random.default_rng(9000 + 31 * seed)
+    mesh = _mesh(mesh_shape)
+    s_off = dataclasses.replace(SPEC, mesh=mesh, shard_combine=combine,
+                                shard_layout=layout, overlap=False)
+    s_on = dataclasses.replace(s_off, overlap=True)
+    if op_pair == "spmm":
+        c = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+        ops = (a, a, c)
+    else:
+        b = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+        ops = (a, b, c)
+    off = api.tile_fused_matmul(*ops, backend="sharded", spec=s_off)
+    on = api.tile_fused_matmul(*ops, backend="sharded", spec=s_on)
+    np.testing.assert_allclose(
+        np.asarray(on, np.float64), np.asarray(off, np.float64),
+        rtol=1e-6, atol=1e-6,
+        err_msg=f"{op_pair}/{pattern}/seed{seed}/{mesh_shape}/"
+                f"{combine}/{layout}")

@@ -10,6 +10,13 @@ directory are diffed row by row (per-row ``us`` delta plus any numeric
 derived keys that moved) for trend reporting — smoke timings are noisy,
 but a derived metric (hit rate, fused ratio, max grad error) drifting
 between runs is a real signal.
+
+``--check`` additionally (a) forwards to ``benchmarks.run --check`` so the
+absolute thresholds gate, and (b) fails if any GATED row — a row matched
+by a ``benchmarks/thresholds.json`` entry — regressed by more than 20%
+between the two newest artifacts: slower ``us``, or the gated derived key
+moving >20% toward its bound (down for ``min`` gates, up for ``max``).
+Ungated rows only ever produce trend chatter, never a failure.
 """
 from __future__ import annotations
 
@@ -59,10 +66,63 @@ def diff_latest(directory: str = ".", out=sys.stdout) -> None:
             print(f"#   {name}: {'; '.join(parts)}", file=out)
 
 
+def _latest_two(directory: str = "."):
+    paths = sorted(glob.glob(os.path.join(directory, "BENCH_*.json")),
+                   key=os.path.getmtime)
+    return paths[-2:] if len(paths) >= 2 else None
+
+
+def check_regressions(directory: str = ".", tolerance: float = 0.20) -> list:
+    """>``tolerance`` regressions on gated rows between the two newest
+    BENCH_*.json artifacts; list of violation strings (empty = pass)."""
+    pair = _latest_two(directory)
+    if pair is None:
+        return []
+    old_p, new_p = pair
+    with open(old_p) as f:
+        old = {r["name"]: r for r in json.load(f)["rows"]}
+    with open(new_p) as f:
+        new = {r["name"]: r for r in json.load(f)["rows"]}
+    with open(run.THRESHOLDS_PATH) as f:
+        thresholds = json.load(f)
+    bad = []
+    for th in thresholds:
+        for name in sorted(set(old) & set(new)):
+            if not name.startswith(th["row"]):
+                continue
+            o, n = old[name], new[name]
+            if o["us"] and n["us"] > o["us"] * (1 + tolerance):
+                bad.append(f"{name}: us {o['us']:.1f} -> {n['us']:.1f} "
+                           f"(>{tolerance:.0%} slower)")
+            key = th["key"]
+            if key == "us":
+                continue
+            ov, nv = o["derived"].get(key), n["derived"].get(key)
+            if not (isinstance(ov, float) and isinstance(nv, float)) or not ov:
+                continue
+            if "min" in th and nv < ov * (1 - tolerance):
+                bad.append(f"{name}: {key} {ov:g} -> {nv:g} "
+                           f"(>{tolerance:.0%} drop on a min-gated key)")
+            if "max" in th and nv > ov * (1 + tolerance):
+                bad.append(f"{name}: {key} {ov:g} -> {nv:g} "
+                           f"(>{tolerance:.0%} rise on a max-gated key)")
+    return sorted(set(bad))
+
+
 def main() -> None:
-    sys.argv = [sys.argv[0], "--smoke", "--json"] + sys.argv[1:]
+    check = "--check" in sys.argv[1:]
+    extra = [a for a in sys.argv[1:] if a != "--check"]
+    sys.argv = ([sys.argv[0], "--smoke", "--json"]
+                + (["--check"] if check else []) + extra)
     run.main()
     diff_latest()
+    if check:
+        bad = check_regressions()
+        for v in bad:
+            print(f"TREND REGRESSION: {v}", file=sys.stderr)
+        if bad:
+            sys.exit(1)
+        print("# trend ok (gated rows within 20% of previous artifact)")
 
 
 if __name__ == "__main__":
