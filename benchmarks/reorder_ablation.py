@@ -3,12 +3,28 @@
 The paper's fused ratio is bandwidth-limited; RCM reordering (one-off,
 amortized like the scheduler) should lift it on graph matrices — the
 paper's weakest case (graph ratios ~2x below SPD, §4.2.1).
+
+Two gated additions (ISSUE 10):
+
+* ``reorder/auto_never_worse/*`` prices the ``spec.reorder="auto"``
+  schedule transform against ``reorder=None`` on every matrix —
+  ``traffic_ratio`` (auto fused bytes / identity fused bytes) must never
+  exceed 1.0, the by-construction guarantee of the Eq-3 floor.
+* ``reorder/rcm_time/large_component`` times ``rcm_order`` on one large
+  near-single-component banded matrix.  Regression note: the BFS queue
+  must stay a ``collections.deque`` — the old ``list.pop(0)`` is linear
+  per pop, which turned this exact case O(n²) (tens of seconds at the
+  full 65k-row size vs milliseconds with ``popleft``).
 """
 from __future__ import annotations
 
+import dataclasses
+import time
+
 import numpy as np
 
-from repro.core.sparse.random import powerlaw_graph, block_diag_noise
+from repro.core.sparse.random import banded_spd, powerlaw_graph, \
+    block_diag_noise
 from repro.core.tilefusion import api
 from repro.core.tilefusion.reorder import bandwidth, permute_csr, rcm_order
 
@@ -37,4 +53,22 @@ def run():
         rows.append((f"reorder/{name}", 0.0,
                      f"ratio_before={r0:.3f};ratio_after={r1:.3f};"
                      f"bw_before={bandwidth(a)};bw_after={bandwidth(a2)}"))
+        # the reorder="auto" schedule transform must never raise modeled
+        # Eq-3 traffic over the identity ordering (gated, smoke-safe)
+        base = api.get_schedule(a, b_col=64, c_col=64, spec=spec)
+        auto = api.get_schedule(
+            a, b_col=64, c_col=64,
+            spec=dataclasses.replace(spec, reorder="auto"))
+        ratio = (auto.traffic_model["fused_bytes"]
+                 / max(base.traffic_model["fused_bytes"], 1.0))
+        rows.append((f"reorder/auto_never_worse/{name}", 0.0,
+                     f"traffic_ratio={ratio:.4f};"
+                     f"applied={auto.reorder or 'none'}"))
+    # deque-BFS timing regression canary: one big single-component matrix
+    big = banded_spd(bench_n(65_536, smoke_n=1024), bandwidth=4, seed=5)
+    t0 = time.perf_counter()
+    rcm_order(big)
+    rows.append(("reorder/rcm_time/large_component",
+                 (time.perf_counter() - t0) * 1e6,
+                 f"n={big.n_rows};nnz={big.nnz}"))
     return rows

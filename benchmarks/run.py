@@ -26,6 +26,7 @@ MODULES = [
     "fig10_amortization",
     "inspector_bench",
     "reorder_ablation",
+    "hetero_bench",
     "kernels_bench",
     "sharded_scaling",
     "serving_bench",

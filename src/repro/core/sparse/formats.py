@@ -78,7 +78,10 @@ class CSR:
             n_cols=n_cols,
             indptr=np.asarray(indptr, dtype=np.int32),
             indices=np.concatenate(indices) if indices else np.zeros(0, np.int32),
-            data=np.concatenate(data) if data else np.zeros(0, np.float64),
+            # preserve the source dtype even when every row is empty — a
+            # hardcoded float64 here flows into operand_dtype_bytes and
+            # misprices Eq-3 for f32/bf16 zero-nnz patterns
+            data=np.concatenate(data) if data else np.zeros(0, a.dtype),
         )
 
     def transpose(self) -> "CSR":
@@ -102,7 +105,12 @@ class CSR:
 
     @staticmethod
     def from_coo(n_rows: int, n_cols: int, rows: np.ndarray, cols: np.ndarray,
-                 vals: np.ndarray) -> "CSR":
+                 vals: np.ndarray, *, dtype=None) -> "CSR":
+        # coerce up front so list inputs and zero-nnz patterns keep a real,
+        # caller-controlled value dtype (pass dtype= for an empty build)
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        vals = np.asarray(vals, dtype=dtype)
         order = np.lexsort((cols, rows))
         rows, cols, vals = rows[order], cols[order], vals[order]
         # merge duplicates
@@ -129,6 +137,10 @@ def csr_content_digest(a: CSR) -> bytes:
         h.update(np.asarray([a.n_rows, a.n_cols], np.int64).tobytes())
         h.update(np.ascontiguousarray(a.indptr, np.int32).tobytes())
         h.update(np.ascontiguousarray(a.indices, np.int32).tobytes())
+        # tag the source dtype: the value bytes below are canonicalized to
+        # f64, so without this, identical patterns held at f32 vs bf16
+        # would collide — and dtype_bytes-priced entries would alias
+        h.update(str(a.data.dtype).encode())
         h.update(np.ascontiguousarray(a.data, np.float64).tobytes())
         digest = h.digest()
         object.__setattr__(a, "_content_digest", digest)
@@ -297,6 +309,45 @@ def block_csr_pattern(a: CSR, block: int) -> CSR:
     np.add.at(indptr, urows + 1, 1)
     indptr = np.cumsum(indptr).astype(np.int32)
     return CSR(nb_rows, nb_cols, indptr, ucols, counts.astype(np.float64))
+
+
+def block_diag_csr(mats, *, row_sizes=None, col_sizes=None) -> CSR:
+    """Stack CSR matrices block-diagonally into one CSR.
+
+    Block ``r`` occupies rows ``[sum(row_sizes[:r]), ...)`` and columns
+    ``[sum(col_sizes[:r]), ...)``; size overrides larger than a block's own
+    shape pad it with empty rows / never-referenced columns (the hetero
+    fusion path passes a square pitch per relation so row and column
+    offsets coincide and the stack stays square).  O(total nnz), one
+    concatenation per array — no COO round-trip.
+    """
+    mats = list(mats)
+    if not mats:
+        raise ValueError("block_diag_csr needs at least one matrix")
+    row_sizes = ([m.n_rows for m in mats] if row_sizes is None
+                 else [int(s) for s in row_sizes])
+    col_sizes = ([m.n_cols for m in mats] if col_sizes is None
+                 else [int(s) for s in col_sizes])
+    if len(row_sizes) != len(mats) or len(col_sizes) != len(mats):
+        raise ValueError("row_sizes/col_sizes must match the matrix count")
+    n_rows, n_cols = sum(row_sizes), sum(col_sizes)
+    indptr = np.zeros(n_rows + 1, dtype=np.int64)
+    idx_parts, data_parts = [], []
+    row_off = col_off = nnz = 0
+    for m, rs, cs in zip(mats, row_sizes, col_sizes):
+        if rs < m.n_rows or cs < m.n_cols:
+            raise ValueError(f"block size ({rs}, {cs}) smaller than matrix "
+                             f"({m.n_rows}, {m.n_cols})")
+        indptr[row_off + 1:row_off + m.n_rows + 1] = nnz + m.indptr[1:]
+        indptr[row_off + m.n_rows + 1:row_off + rs + 1] = nnz + m.indptr[-1]
+        idx_parts.append(m.indices.astype(np.int64) + col_off)
+        data_parts.append(m.data)
+        nnz += m.nnz
+        row_off += rs
+        col_off += cs
+    return CSR(n_rows, n_cols, indptr.astype(np.int32),
+               np.concatenate(idx_parts).astype(np.int32),
+               np.concatenate(data_parts))
 
 
 @dataclasses.dataclass(frozen=True)

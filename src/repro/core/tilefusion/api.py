@@ -106,7 +106,7 @@ import numpy as np
 
 from ..sparse.formats import (CSR, DEFAULT_WIDTH_QUANTILE,
                               csr_content_digest, hybrid_width_cap)
-from . import cost_model, fused_ops, sharded
+from . import cost_model, fused_ops, reorder, sharded
 from .schedule import DeviceSchedule, to_device_schedule
 from .scheduler import Schedule, build_schedule
 from .spec import (FusionSpec, reset_legacy_warning,  # noqa: F401 (re-export)
@@ -232,7 +232,7 @@ def _spec_key(spec: FusionSpec, *, cap, mk, sk) -> tuple:
         nr = None if spec.n_repl is None else int(spec.n_repl)
     return (int(spec.p), float(spec.cache_size), int(spec.ct_size),
             bool(spec.uniform_split), cap, mk, sk, ov, nr,
-            bool(spec.transpose), int(spec.dtype_bytes))
+            bool(spec.transpose), int(spec.dtype_bytes), spec.reorder)
 
 
 #: Valid ``backend=`` values for tile_fused_matmul.
@@ -322,6 +322,15 @@ class ScheduleEntry:
     #: itemsize of the dense operand the entry prices traffic for; part of
     #: the cache key (bf16 and f32 move different bytes through Eq 3)
     dtype_bytes: int = 4
+    #: reorder transform baked into the schedule ("rcm" | "similarity";
+    #: None = identity ordering — including ``reorder="auto"`` builds
+    #: where no candidate cleared the Eq-3 floor)
+    reorder: str | None = None
+    #: the symmetric row/col permutation the schedule was inspected under
+    #: (``perm[new] = old``) and its inverse; dispatch permutes the dense
+    #: operands in and the output back out — callers never apply/undo it
+    reorder_perm: np.ndarray | None = None
+    reorder_inv: np.ndarray | None = None
 
 
 _schedule_cache: "collections.OrderedDict" = collections.OrderedDict()
@@ -499,7 +508,20 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int,
     ``spec.dtype_bytes`` is the dense operand's itemsize; it scales the
     Eq-3 value traffic (index traffic stays at 4 bytes) and joins the
     cache key so bf16 and f32 runs of one pattern price — and autotune —
-    separately."""
+    separately.
+
+    ``spec.reorder`` makes bandwidth-reducing reordering a schedule
+    transform: the pattern is symmetrically permuted (RCM or the
+    similarity grouping; ``"auto"`` tries both) before inspection, the
+    candidate priced by the same Eq-3 model as dispatch, and — when it
+    applies — the permutation baked into the entry
+    (``reorder_perm``/``reorder_inv``); ``tile_fused_matmul`` permutes
+    the dense operands in and the output back out, so callers never see
+    the reordered frame.  ``"auto"`` applies only when the modeled fused
+    traffic beats the identity by ``MIN_TRAFFIC_SAVING`` and skips
+    rectangular patterns; a forced ordering raises on them.  The knob
+    joins the cache key (``_spec_key``); it does not compose with
+    ``bucket``."""
     spec = _coerce_spec(spec, legacy, "get_schedule")
     if spec.dtype_bytes is None:
         spec = dataclasses.replace(spec, dtype_bytes=4)
@@ -522,6 +544,11 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int,
         if transpose:
             raise ValueError("bucket= is a serving (inference) knob; it "
                              "does not compose with transpose=True")
+        if spec.reorder is not None:
+            raise ValueError("bucket= does not compose with reorder= — "
+                             "the incremental inspector patches by row "
+                             "position, which a baked permutation would "
+                             "silently invalidate")
     if spec.autotune:
         return _autotune_schedule(a, b_col=b_col, c_col=c_col,
                                   b_is_sparse=b_is_sparse, spec=spec,
@@ -545,11 +572,19 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int,
     dsched = to_device_schedule(a_eff, sched, width_cap=cap)
     tm = dsched.hbm_traffic_model(b_col, c_col,
                                   dtype_bytes=spec.dtype_bytes)
-    tm["packed_ell_bytes"] = _packed_ell_bytes(a_eff, dsched, b_is_sparse,
+    a_sched = a_eff
+    applied = perm = inv = None
+    if spec.reorder is not None:
+        picked = _priced_reorder(a_eff, spec, cap=cap, b_col=b_col,
+                                 c_col=c_col, b_is_sparse=b_is_sparse,
+                                 base_tm=tm)
+        if picked is not None:
+            applied, perm, inv, a_sched, sched, dsched, tm = picked
+    tm["packed_ell_bytes"] = _packed_ell_bytes(a_sched, dsched, b_is_sparse,
                                                spec.dtype_bytes)
     shard = None
     if mk is not None:
-        shard = _shard_for_mesh(a_eff, sched, dsched, mk, b_col=b_col,
+        shard = _shard_for_mesh(a_sched, sched, dsched, mk, b_col=b_col,
                                 c_col=c_col, b_is_sparse=b_is_sparse,
                                 width_cap=cap, shard_combine=sk[0],
                                 shard_layout=sk[1],
@@ -566,11 +601,65 @@ def get_schedule(a: CSR, *, b_col: int, c_col: int,
                           content_digest=digest,
                           bucket=bucket,
                           transpose=transpose,
-                          dtype_bytes=spec.dtype_bytes)
+                          dtype_bytes=spec.dtype_bytes,
+                          reorder=applied, reorder_perm=perm,
+                          reorder_inv=inv)
     with _lock:
         _stats["misses"] += 1
         _cache_put(_schedule_cache, key, entry)
     return entry
+
+
+def _priced_reorder(a_eff: CSR, spec: FusionSpec, *, cap, b_col: int,
+                    c_col: int, b_is_sparse: bool, base_tm: dict):
+    """Resolve ``spec.reorder`` into an applied schedule transform.
+
+    Builds a full candidate schedule per ordering (RCM, or the
+    binary-row-merging similarity grouping; ``"auto"`` tries both) on the
+    symmetrically permuted pattern and prices it with the same Eq-3
+    tile-cost aggregation the dispatch floor uses (``fused_bytes`` is the
+    ``tile_costs_batch`` sum).  A forced ordering always applies; "auto"
+    applies the best candidate only when its modeled fused traffic beats
+    the identity ordering by ``MIN_TRAFFIC_SAVING`` — the same
+    bytes-model-vs-off-model-fixed-costs floor ``select_backend`` trusts —
+    so "auto" can never raise modeled traffic.  Returns ``(name, perm,
+    inv, a_perm, sched, dsched, tm)`` or None for the identity.
+
+    The symmetric permutation P·A·Pᵀ needs a square matrix; "auto" skips
+    rectangular patterns quietly, a forced ordering raises (the old
+    ``permute_csr`` silently corrupted this case)."""
+    if a_eff.n_rows != a_eff.n_cols:
+        if spec.reorder == "auto":
+            return None
+        raise ValueError(
+            f"reorder={spec.reorder!r} needs a square matrix (symmetric "
+            f"permutation P·A·Pᵀ); got ({a_eff.n_rows}, {a_eff.n_cols}). "
+            f"Use reorder='auto' to skip rectangular patterns.")
+    names = (("rcm", "similarity") if spec.reorder == "auto"
+             else (spec.reorder,))
+    best = None
+    for name in names:
+        fn = reorder.rcm_order if name == "rcm" else reorder.similarity_order
+        cand_perm = fn(a_eff)
+        a_p = reorder.permute_csr(a_eff, cand_perm)
+        sched_p = build_schedule(a_p, b_col=b_col, c_col=c_col, p=spec.p,
+                                 cache_size=spec.cache_size,
+                                 ct_size=spec.ct_size,
+                                 b_is_sparse=b_is_sparse,
+                                 uniform_split=spec.uniform_split,
+                                 width_cap=cap)
+        dsched_p = to_device_schedule(a_p, sched_p, width_cap=cap)
+        tm_p = dsched_p.hbm_traffic_model(b_col, c_col,
+                                          dtype_bytes=spec.dtype_bytes)
+        if best is None or tm_p["fused_bytes"] < best[5]["fused_bytes"]:
+            best = (name, cand_perm, a_p, sched_p, dsched_p, tm_p)
+    name, cand_perm, a_p, sched_p, dsched_p, tm_p = best
+    if (spec.reorder == "auto"
+            and cost_model.reorder_gain(base_tm, tm_p) < MIN_TRAFFIC_SAVING):
+        return None
+    inv = np.empty_like(cand_perm)
+    inv[cand_perm] = np.arange(cand_perm.shape[0])
+    return name, cand_perm, inv, a_p, sched_p, dsched_p, tm_p
 
 
 def store_bucket_schedule(entry: ScheduleEntry, *, bucket: tuple,
@@ -592,7 +681,7 @@ def store_bucket_schedule(entry: ScheduleEntry, *, bucket: tuple,
         raise ValueError("bucket entries need content_digest set")
     spec = _coerce_spec(spec, legacy, "store_bucket_schedule")
     spec = dataclasses.replace(
-        spec, transpose=False, mesh=None,
+        spec, transpose=False, mesh=None, reorder=None,
         dtype_bytes=4 if spec.dtype_bytes is None else int(spec.dtype_bytes))
     key = (("bucket", tuple(bucket)), entry.b_col, entry.c_col,
            entry.b_is_sparse,
@@ -680,8 +769,12 @@ def _autotune_schedule(a: CSR, *, b_col: int, c_col: int,
                                inspector_s=time.perf_counter() - t0)
     if mk is not None:
         # the sweep's candidates are mesh-free; shard the winner (a fresh
-        # traffic_model dict so the single-device candidate stays untouched)
-        shard = _shard_for_mesh(a_eff, best.sched, best.dsched, mk,
+        # traffic_model dict so the single-device candidate stays untouched).
+        # A reordered winner must be sharded on the *permuted* matrix its
+        # schedule was inspected under, not the caller's ordering.
+        a_shard = (reorder.permute_csr(a_eff, best.reorder_perm)
+                   if best.reorder_perm is not None else a_eff)
+        shard = _shard_for_mesh(a_shard, best.sched, best.dsched, mk,
                                 b_col=b_col, c_col=c_col,
                                 b_is_sparse=b_is_sparse,
                                 width_cap=best.width_cap,
@@ -767,11 +860,14 @@ def schedule_cache_stats() -> dict:
     with _lock, _ell_lock:
         mesh_entries = layout_1d = layout_15d = layout_25d = 0
         layout_fallback = bucket_entries = transpose_entries = 0
+        reorder_entries = 0
         for e in _schedule_cache.values():
             if e.bucket is not None:
                 bucket_entries += 1
             if e.transpose:
                 transpose_entries += 1
+            if e.reorder is not None:
+                reorder_entries += 1
             if e.mesh_key is None:
                 continue
             mesh_entries += 1
@@ -791,6 +887,7 @@ def schedule_cache_stats() -> dict:
                     mesh_entries=mesh_entries,
                     bucket_entries=bucket_entries,
                     transpose_entries=transpose_entries,
+                    reorder_entries=reorder_entries,
                     spec_entries=spec_entries,
                     layout_1d=layout_1d, layout_15d=layout_15d,
                     layout_25d=layout_25d,
@@ -982,21 +1079,40 @@ def _dispatch(a: CSR, b_or_a1, c, *, backend: str,
         # fallback: the XLA executor is the sharded path's one-device twin
         chosen = "xla"
     if chosen == "unfused":
-        return run_unfused()
+        return run_unfused()          # unpermuted operands — no reorder math
+    # an entry built under spec.reorder carries its permutation: permute
+    # the row-indexed operands in (P·B / P·A1 — jnp.take, so gradients
+    # flow through the linear permutation) and the output back out; the
+    # caller never sees the reordered frame
+    perm = entry.reorder_perm
+    if perm is not None:
+        if b_is_sparse:
+            a1_run = reorder.permute_rows_cached(a1_run, perm)
     if chosen == "sharded":
         if b_is_sparse:
-            return sharded.sharded_spmm_spmm(entry.shard, entry.dsched,
-                                             spec.mesh, a1_run, c)
-        return sharded.sharded_gemm_spmm(entry.shard, spec.mesh,
-                                         jnp.asarray(b_or_a1), c)
-    if b_is_sparse:
+            d = sharded.sharded_spmm_spmm(entry.shard, entry.dsched,
+                                          spec.mesh, a1_run, c)
+        else:
+            b = jnp.asarray(b_or_a1)
+            if perm is not None:
+                b = jnp.take(b, jnp.asarray(perm), axis=0)
+            d = sharded.sharded_gemm_spmm(entry.shard, spec.mesh, b, c)
+    elif b_is_sparse:
         if chosen == "pallas":
-            return _spmm_spmm_pallas(entry, a1_run, c)
-        return fused_ops.fused_spmm_spmm(entry.dsched, a1_run, c)
-    b = jnp.asarray(b_or_a1)
-    if chosen == "pallas":
-        return _gemm_spmm_pallas(entry, b, c)
-    return fused_ops.fused_gemm_spmm(entry.dsched, b, c)
+            d = _spmm_spmm_pallas(entry, a1_run, c)
+        else:
+            d = fused_ops.fused_spmm_spmm(entry.dsched, a1_run, c)
+    else:
+        b = jnp.asarray(b_or_a1)
+        if perm is not None:
+            b = jnp.take(b, jnp.asarray(perm), axis=0)
+        if chosen == "pallas":
+            d = _gemm_spmm_pallas(entry, b, c)
+        else:
+            d = fused_ops.fused_gemm_spmm(entry.dsched, b, c)
+    if perm is not None:
+        d = jnp.take(d, jnp.asarray(entry.reorder_inv), axis=0)
+    return d
 
 
 def _bwd_knobs(knobs: dict) -> dict:

@@ -445,6 +445,20 @@ def serving_bucket_price(*, n_rows: int, n_pad: int, nnz: int, b_col: int,
     }
 
 
+def reorder_gain(base_tm: dict, perm_tm: dict) -> float:
+    """Relative Eq-3 fused-traffic saving of a permuted schedule over the
+    identity ordering — ``1 - fused_bytes'/fused_bytes``, the quantity
+    ``api._priced_reorder`` holds against ``MIN_TRAFFIC_SAVING`` before
+    baking a permutation into a cached entry.  Both dicts are
+    ``hbm_traffic_model`` outputs (``fused_bytes`` aggregates the
+    ``tile_costs_batch`` per-tile Eq-3 costs).  >= 0 means the reorder
+    helps; a degenerate zero-traffic base reports 0 (never apply)."""
+    base = float(base_tm["fused_bytes"])
+    if base <= 0.0:
+        return 0.0
+    return 1.0 - float(perm_tm["fused_bytes"]) / base
+
+
 def tile_cost_bytes(a, i_start, i_end, j_rows, b_col, c_col, b_is_sparse,
                     dtype_bytes: int = 4) -> float:
     return tile_cost_elements(a, i_start, i_end, j_rows, b_col, c_col,

@@ -6,21 +6,43 @@ the matrix bandwidth.  The paper takes the matrix ordering as given; a
 reverse Cuthill-McKee (RCM) pass before scheduling concentrates each row's
 neighbourhood into a contiguous range, raising the fused ratio on graph
 matrices (the paper's weak case) at a one-off O(nnz log n) cost amortized
-exactly like the scheduler itself.
+exactly like the scheduler itself.  ``similarity_order`` is the binary-
+row-merging alternative (arXiv 2206.06611): group rows whose column
+support hits the same tile-granularity blocks, cheap and
+rectangular-safe.
 
 Correctness: D = A(BC) with symmetric permutation P is
 P·D = (P·A·Pᵀ)((P·B)·C) — the caller permutes A's rows/cols and B's rows,
-and un-permutes D (`apply`/`undo` helpers).
+and un-permutes D.  Since ISSUE 10 callers normally never do this by hand:
+``FusionSpec(reorder=...)`` makes the permutation a schedule transform
+inside ``api.get_schedule`` (Eq-3-priced, baked into the cached entry).
 """
 from __future__ import annotations
 
+from collections import deque
+
 import numpy as np
 
-from ..sparse.formats import CSR
+from ..sparse.formats import CSR, csr_content_digest
+
+
+def _require_square(a: CSR, who: str) -> None:
+    if a.n_rows != a.n_cols:
+        raise ValueError(
+            f"{who} requires a square matrix (symmetric permutation "
+            f"P·A·Pᵀ); got ({a.n_rows}, {a.n_cols}).  For rectangular "
+            f"matrices pass explicit row_perm=/col_perm= to permute_csr.")
 
 
 def rcm_order(a: CSR) -> np.ndarray:
-    """Reverse Cuthill-McKee permutation (perm[new] = old)."""
+    """Reverse Cuthill-McKee permutation (perm[new] = old).
+
+    Treats column ids as neighbour row ids, so the matrix must be square
+    (raises otherwise — on a rectangular CSR the old code silently walked
+    column ids as if they were rows).  BFS uses a deque: ``list.pop(0)``
+    is O(n) per pop, turning near-single-component graphs O(n²).
+    """
+    _require_square(a, "rcm_order")
     n = a.n_rows
     deg = np.diff(a.indptr)
     visited = np.zeros(n, dtype=bool)
@@ -32,10 +54,10 @@ def rcm_order(a: CSR) -> np.ndarray:
         if visited[seed]:
             continue
         # BFS with degree-sorted neighbour expansion
-        queue = [int(seed)]
+        queue = deque((int(seed),))
         visited[seed] = True
         while queue:
-            u = queue.pop(0)
+            u = queue.popleft()
             order[pos] = u
             pos += 1
             nbrs = a.indices[a.indptr[u]:a.indptr[u + 1]]
@@ -48,15 +70,89 @@ def rcm_order(a: CSR) -> np.ndarray:
     return order[::-1].copy()          # the "reverse" in RCM
 
 
-def permute_csr(a: CSR, perm: np.ndarray) -> CSR:
-    """Symmetric permutation: A' = P A Pᵀ with perm[new] = old."""
-    inv = np.empty_like(perm)
-    inv[perm] = np.arange(perm.shape[0])
+def similarity_order(a: CSR, block: int = 64) -> np.ndarray:
+    """Row ordering by column-support similarity (perm[new] = old).
+
+    Binary-row-merging-style grouping (arXiv 2206.06611): each row gets a
+    bitmask of the ``block``-granularity column blocks it touches, and
+    rows are sorted lexicographically by that mask so rows with matching
+    support land adjacent — the same locality the merge phase exploits,
+    here used to pack fusable rows into the same tile.  O(nnz + n·words);
+    rectangular-safe (it permutes rows only — pair with an identity
+    column permutation, or use it on the row axis of a fused stack).
+    """
+    n = a.n_rows
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    n_blocks = max(-(-a.n_cols // max(int(block), 1)), 1)
+    n_words = -(-n_blocks // 64)
+    masks = np.zeros((n, n_words), dtype=np.uint64)
+    if a.nnz:
+        rows = np.repeat(np.arange(n, dtype=np.int64), np.diff(a.indptr))
+        blk = a.indices.astype(np.int64) // max(int(block), 1)
+        word, bit = blk // 64, blk % 64
+        np.bitwise_or.at(masks, (rows, word),
+                         np.uint64(1) << bit.astype(np.uint64))
+    # lexsort by mask words (most-significant word last = primary key)
+    keys = tuple(masks[:, w] for w in range(n_words))
+    return np.lexsort(keys).astype(np.int64)
+
+
+def permute_csr(a: CSR, perm: np.ndarray | None = None, *,
+                row_perm: np.ndarray | None = None,
+                col_perm: np.ndarray | None = None) -> CSR:
+    """Permute a CSR matrix.
+
+    ``perm=`` is the symmetric sugar ``A' = P A Pᵀ`` with ``perm[new] =
+    old`` — square matrices only (raises on rectangular: the old code
+    indexed the n_rows-sized inverse by column ids, silently corrupting
+    or crashing any ``n_rows != n_cols`` input).  For the general case
+    pass ``row_perm=`` and/or ``col_perm=`` (each ``perm[new] = old``,
+    sized by the respective axis).
+    """
+    if perm is not None:
+        if row_perm is not None or col_perm is not None:
+            raise ValueError("pass either perm= or row_perm=/col_perm=, "
+                             "not both")
+        _require_square(a, "permute_csr(perm=)")
+        row_perm = col_perm = np.asarray(perm, dtype=np.int64)
+    if row_perm is None and col_perm is None:
+        return a
     rows = np.repeat(np.arange(a.n_rows), np.diff(a.indptr))
-    new_rows = inv[rows]
-    new_cols = inv[a.indices]
-    return CSR.from_coo(a.n_rows, a.n_cols, new_rows.astype(np.int64),
-                        new_cols.astype(np.int64), a.data.copy())
+    if row_perm is not None:
+        row_perm = np.asarray(row_perm, dtype=np.int64)
+        if row_perm.shape[0] != a.n_rows:
+            raise ValueError(f"row_perm has {row_perm.shape[0]} entries "
+                             f"for {a.n_rows} rows")
+        inv_r = np.empty_like(row_perm)
+        inv_r[row_perm] = np.arange(row_perm.shape[0])
+        rows = inv_r[rows]
+    cols = a.indices
+    if col_perm is not None:
+        col_perm = np.asarray(col_perm, dtype=np.int64)
+        if col_perm.shape[0] != a.n_cols:
+            raise ValueError(f"col_perm has {col_perm.shape[0]} entries "
+                             f"for {a.n_cols} columns")
+        inv_c = np.empty_like(col_perm)
+        inv_c[col_perm] = np.arange(col_perm.shape[0])
+        cols = inv_c[cols]
+    return CSR.from_coo(a.n_rows, a.n_cols, rows.astype(np.int64),
+                        cols.astype(np.int64), a.data.copy())
+
+
+def permute_rows_cached(a: CSR, perm: np.ndarray) -> CSR:
+    """Row-permuted view ``P·A``, memoized per (instance, perm digest).
+
+    The SpMM-SpMM dispatch path row-permutes the first operand on every
+    call with an active reorder; the memo makes that a one-off per
+    (matrix, permutation) like every other pack in the system."""
+    tag = hash((csr_content_digest(a), perm.tobytes()))
+    memo = getattr(a, "_row_perm_memo", None)
+    if memo is not None and memo[0] == tag:
+        return memo[1]
+    out = permute_csr(a, row_perm=perm)
+    object.__setattr__(a, "_row_perm_memo", (tag, out))
+    return out
 
 
 def bandwidth(a: CSR) -> int:

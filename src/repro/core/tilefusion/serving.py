@@ -125,6 +125,11 @@ def incremental_update(a_old: CSR, entry: api.ScheduleEntry, a_new: CSR,
     sched = entry.sched
     if entry.shard is not None or entry.mesh_key is not None:
         return None
+    if entry.reorder_perm is not None:
+        # a baked permutation renumbers every row the dirty diff names —
+        # patch-by-position would corrupt it silently (bucket entries
+        # never carry one: get_schedule rejects bucket= + reorder=)
+        return None
     if not fused_ops._is_uniform(ds):
         return None
     n_i, n_j, t = sched.n_i, sched.n_j, sched.t

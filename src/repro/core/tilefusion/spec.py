@@ -41,7 +41,12 @@ class FusionSpec:
     replica × depth axes, None = let the layout pricing decide); serving:
     ``bucket``; training: ``transpose``; pricing: ``dtype_bytes`` (None =
     infer from the call's dense operands; ``get_schedule`` without
-    operands defaults it to 4).
+    operands defaults it to 4); schedule transform: ``reorder`` (None |
+    "auto" | "rcm" | "similarity" — permute the pattern before
+    inspection, "auto" applies the best candidate ordering only when the
+    Eq-3 traffic model says it beats the identity by the dispatch floor;
+    the permutation is baked into the cached entry, callers never
+    apply/undo it themselves).
 
     Frozen and hashable on its own, but the *cache key* uses the resolved
     form ``api``'s key helper derives (a live ``Mesh`` object is not a
@@ -62,8 +67,13 @@ class FusionSpec:
     bucket: tuple | None = None
     transpose: bool = False
     dtype_bytes: int | None = None
+    reorder: str | None = None
 
     def __post_init__(self):
+        if self.reorder not in (None, "auto", "rcm", "similarity"):
+            raise ValueError(
+                f"reorder={self.reorder!r}; expected None, 'auto', 'rcm' "
+                f"or 'similarity'")
         if not isinstance(self.overlap, bool) and self.overlap != "auto":
             raise ValueError(
                 f"overlap={self.overlap!r}; expected a bool or 'auto'")

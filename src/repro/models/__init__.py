@@ -1,3 +1,3 @@
-from . import gcn, layers, sharding, ssm, transformer
+from . import gcn, hetero_gcn, layers, sharding, ssm, transformer
 
-__all__ = ["gcn", "layers", "sharding", "ssm", "transformer"]
+__all__ = ["gcn", "hetero_gcn", "layers", "sharding", "ssm", "transformer"]

@@ -22,11 +22,23 @@ def normalize_adjacency(a: CSR) -> CSR:
     The degree arithmetic runs in float64 for accuracy, but the result is
     cast back to ``a.data``'s dtype: a float32 (or bf16) adjacency must
     not silently become a float64 one, which would hash, pack, and price
-    every downstream schedule at the wrong itemsize."""
+    every downstream schedule at the wrong itemsize.
+
+    Square adjacencies use the row degree on both sides (the classic
+    symmetric normalization).  Rectangular ones — hetero-graph relations
+    are ``(n_dst, n_src)`` — scale each side by its own axis degree:
+    rows by out-neighbour count, columns by in-neighbour count."""
     deg = np.maximum(np.diff(a.indptr), 1).astype(np.float64)
     dinv = 1.0 / np.sqrt(deg)
     rows = np.repeat(np.arange(a.n_rows), np.diff(a.indptr))
-    data = (a.data * dinv[rows] * dinv[a.indices]).astype(
+    if a.n_rows == a.n_cols:
+        cinv = dinv
+    else:
+        col_deg = np.maximum(
+            np.bincount(a.indices, minlength=a.n_cols), 1).astype(
+                np.float64)
+        cinv = 1.0 / np.sqrt(col_deg)
+    data = (a.data * dinv[rows] * cinv[a.indices]).astype(
         a.data.dtype, copy=False)
     return CSR(a.n_rows, a.n_cols, a.indptr, a.indices, data)
 

@@ -201,3 +201,44 @@ def test_hub_row_spills_under_auto_cap():
     _, _, spill_flat, _, _ = fused_ops._op1_ell(a, ds,
                                                 width_cap=ds.width_cap)
     assert ds.spill_rows1.size + spill_flat.size > 0
+
+
+@pytest.mark.parametrize("reorder", ["auto", "rcm", "similarity"])
+@pytest.mark.parametrize("op_pair", ["gemm", "spmm"])
+def test_reorder_under_dispatch_parity(op_pair, reorder):
+    """``spec.reorder`` is invisible to callers: the dispatch permutes the
+    row-indexed operands in and the output back out, so every backend's
+    result on a reordered schedule must equal the unpermuted oracle —
+    including "auto" entries where the Eq-3 floor declined and no
+    permutation is active."""
+    import dataclasses as _dc
+    spec = api.FusionSpec(**KNOBS, reorder=reorder)
+    for pattern, seed in (("powerlaw", 0), ("blockdiag", 2), ("banded", 1)):
+        a = PATTERNS[pattern](64, seed)
+        rng = np.random.default_rng(10 * seed + 1)
+        c_sp = rng.standard_normal((64, 6))
+        b = rng.standard_normal((64, 8))
+        c_ge = rng.standard_normal((8, 6))
+        for backend in ("xla", "unfused", "auto", "pallas"):
+            if op_pair == "spmm":
+                got = api.tile_fused_matmul(
+                    a, a, jnp.asarray(c_sp, jnp.float32), backend=backend,
+                    spec=spec)
+                want = fused_ref.unfused_spmm_spmm(a, a, c_sp)
+            else:
+                got = api.tile_fused_matmul(
+                    a, jnp.asarray(b, jnp.float32),
+                    jnp.asarray(c_ge, jnp.float32), backend=backend,
+                    spec=spec)
+                want = fused_ref.unfused_gemm_spmm(a, b, c_ge)
+            np.testing.assert_allclose(
+                np.asarray(got), want, rtol=2e-3, atol=2e-3,
+                err_msg=f"{op_pair}/{backend}/{pattern}/reorder={reorder}")
+        # pin that forced modes really ran permuted (not a no-op pass)
+        if reorder != "auto":
+            entry = api.get_schedule(
+                a, b_col=6 if op_pair == "spmm" else 8, c_col=6,
+                b_is_sparse=(op_pair == "spmm"),
+                spec=_dc.replace(spec, dtype_bytes=4))
+            assert entry.reorder == reorder
+            assert entry.reorder_perm is not None

@@ -12,6 +12,17 @@ from repro.models import transformer as T
 ARCHS = ["qwen2.5-3b", "hymba-1.5b", "minicpm3-4b", "xlstm-1.3b"]
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_jit_cache():
+    # Same deterministic jaxlib CPU-compiler segfault test_serving.py
+    # guards against: decode_step's scan compile crashes when it lands on
+    # top of the full suite's accumulated live executables (the hetero /
+    # reorder parity cells ahead of this module pushed it over the edge).
+    # Dropping the process-wide jit caches first keeps the compile
+    # identical to the standalone-run one.
+    jax.clear_caches()
+
+
 @pytest.mark.parametrize("arch", ARCHS)
 def test_prefill_matches_tokenwise(arch):
     cfg = get_config(arch, reduced=True)

@@ -1,10 +1,15 @@
-"""RCM reordering: permutation identity + bandwidth reduction."""
+"""RCM reordering: permutation identity + bandwidth reduction; the
+rectangular-matrix guards, split row/col permutation, deque-BFS parity,
+and the ``spec.reorder`` schedule transform (ISSUE 10)."""
 import numpy as np
+import pytest
 from _prop import given, settings, st
 
+from repro.core.sparse.formats import CSR
 from repro.core.sparse.random import banded_spd, powerlaw_graph
-from repro.core.tilefusion import build_schedule, fused_ref
-from repro.core.tilefusion.reorder import bandwidth, permute_csr, rcm_order
+from repro.core.tilefusion import api, build_schedule, fused_ref
+from repro.core.tilefusion.reorder import (bandwidth, permute_csr,
+                                           rcm_order, similarity_order)
 
 
 def test_rcm_is_permutation():
@@ -38,3 +43,149 @@ def test_permuted_fused_result_matches(seed):
     got = np.empty_like(d_p)
     got[perm] = d_p          # undo: row new->old means D[perm[i]] = D_p[i]
     np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+def _rect(seed=0, shape=(7, 5)):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random(shape) < 0.4) * rng.standard_normal(shape)
+    return CSR.from_dense(dense)
+
+
+def test_rcm_rejects_rectangular():
+    """Before ISSUE 10 ``rcm_order`` walked column ids as row ids on a
+    rectangular CSR — out-of-range reads or a silently wrong order.  Now
+    it refuses up front."""
+    with pytest.raises(ValueError, match="square"):
+        rcm_order(_rect())
+
+
+def test_permute_csr_symmetric_sugar_rejects_rectangular():
+    """``permute_csr(a, perm)`` indexed the n_rows-sized inverse by
+    column ids; on ``n_rows != n_cols`` that corrupted the pattern (or
+    crashed).  The symmetric form now requires a square matrix and points
+    at the split row_perm=/col_perm= API."""
+    a = _rect()
+    with pytest.raises(ValueError, match="row_perm"):
+        permute_csr(a, np.arange(a.n_rows))
+
+
+def test_permute_csr_split_perms_match_dense():
+    a = _rect(seed=3, shape=(9, 6))
+    rng = np.random.default_rng(1)
+    rp = rng.permutation(a.n_rows)
+    cp = rng.permutation(a.n_cols)
+    dense = a.to_dense()
+    np.testing.assert_array_equal(
+        permute_csr(a, row_perm=rp).to_dense(), dense[rp])
+    np.testing.assert_array_equal(
+        permute_csr(a, col_perm=cp).to_dense(), dense[:, cp])
+    np.testing.assert_array_equal(
+        permute_csr(a, row_perm=rp, col_perm=cp).to_dense(),
+        dense[rp][:, cp])
+
+
+def test_permute_csr_validates_sizes():
+    a = _rect(seed=4, shape=(8, 5))
+    with pytest.raises(ValueError, match="row_perm"):
+        permute_csr(a, row_perm=np.arange(a.n_cols))
+    with pytest.raises(ValueError, match="col_perm"):
+        permute_csr(a, col_perm=np.arange(a.n_rows))
+    with pytest.raises(ValueError, match="not both"):
+        permute_csr(banded_spd(6, 2, seed=0), np.arange(6),
+                    row_perm=np.arange(6))
+
+
+def _rcm_list_reference(a: CSR) -> np.ndarray:
+    """The pre-ISSUE-10 list-based BFS (``pop(0)``), kept verbatim as the
+    parity oracle for the deque rewrite: same seeds, same degree-sorted
+    expansion, so the orders must be identical — only the complexity
+    changed (O(n) per pop made near-single-component graphs O(n²))."""
+    n = a.n_rows
+    deg = np.diff(a.indptr)
+    visited = np.zeros(n, dtype=bool)
+    order = []
+    for seed in np.argsort(deg, kind="stable"):
+        if visited[seed]:
+            continue
+        queue = [int(seed)]
+        visited[seed] = True
+        while queue:
+            u = queue.pop(0)
+            order.append(u)
+            nbrs = a.indices[a.indptr[u]:a.indptr[u + 1]]
+            nbrs = nbrs[~visited[nbrs]]
+            if nbrs.size:
+                visited[nbrs] = True
+                nbrs = nbrs[np.argsort(deg[nbrs], kind="stable")]
+                queue.extend(int(x) for x in nbrs)
+    return np.asarray(order, dtype=np.int64)[::-1].copy()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 7))
+def test_rcm_deque_matches_list_bfs(seed):
+    a = (banded_spd(97, 3, seed=seed) if seed % 2
+         else powerlaw_graph(120, 5, seed=seed))
+    np.testing.assert_array_equal(rcm_order(a), _rcm_list_reference(a))
+
+
+def test_similarity_order_is_permutation_and_rect_safe():
+    a = _rect(seed=5, shape=(40, 23))
+    perm = similarity_order(a, block=8)
+    assert sorted(perm.tolist()) == list(range(40))
+    # rows with identical block support land adjacent
+    sq = CSR.from_dense(np.vstack([np.eye(8)[[i // 2 * 2 % 8]]
+                                   for i in range(8)]))
+    p = similarity_order(sq, block=1)
+    key = [int(sq.indices[sq.indptr[i]]) for i in p]
+    assert key == sorted(key)
+
+
+def test_spec_rejects_unknown_reorder():
+    with pytest.raises(ValueError, match="reorder"):
+        api.FusionSpec(reorder="zigzag")
+
+
+def test_reorder_auto_never_raises_modeled_traffic():
+    """The Eq-3 pricing contract: a reorder="auto" entry's fused_bytes
+    never exceed the identity ordering's, and an applied permutation is
+    only accepted past the MIN_TRAFFIC_SAVING floor."""
+    spec = api.FusionSpec(p=2, cache_size=30_000.0, ct_size=32)
+    for seed in range(3):
+        a = powerlaw_graph(256, 5, seed=seed)
+        base = api.get_schedule(a, b_col=8, c_col=8, spec=spec)
+        auto = api.get_schedule(
+            a, b_col=8, c_col=8,
+            spec=api.dataclasses.replace(spec, reorder="auto"))
+        assert (auto.traffic_model["fused_bytes"]
+                <= base.traffic_model["fused_bytes"] + 1e-9)
+        if auto.reorder is not None:
+            assert auto.reorder_perm is not None
+
+
+def test_forced_reorder_bakes_permutation_into_entry():
+    spec = api.FusionSpec(p=2, cache_size=30_000.0, ct_size=32,
+                          reorder="rcm")
+    a = powerlaw_graph(128, 4, seed=2)
+    entry = api.get_schedule(a, b_col=8, c_col=8, spec=spec)
+    assert entry.reorder == "rcm"
+    perm, inv = entry.reorder_perm, entry.reorder_inv
+    assert sorted(perm.tolist()) == list(range(128))
+    np.testing.assert_array_equal(perm[inv], np.arange(128))
+    # distinct cache entries per reorder mode: the knob is in the key
+    st0 = api.schedule_cache_stats()
+    api.get_schedule(a, b_col=8, c_col=8, spec=spec)
+    assert api.schedule_cache_stats()["misses"] == st0["misses"]
+
+
+def test_forced_reorder_rejects_rectangular_schedule():
+    rect = _rect(seed=6, shape=(32, 20))
+    spec = api.FusionSpec(p=2, cache_size=30_000.0, ct_size=32,
+                          reorder="rcm")
+    with pytest.raises(ValueError, match="square"):
+        api.get_schedule(rect, b_col=8, c_col=8, spec=spec)
+    # "auto" degrades gracefully instead: no permutation, no error
+    auto = api.get_schedule(
+        rect, b_col=8, c_col=8,
+        spec=api.dataclasses.replace(spec, reorder="auto"))
+    assert auto.reorder is None and auto.reorder_perm is None
